@@ -1,0 +1,98 @@
+"""Table IV: Travel Assistant completion time vs GPU budget — Maestro's
+hierarchical residency (sleeping keeps warm contexts; weights hot in host
+RAM) vs QLM-style process-level switching (one engine owns a GPU; a model
+switch is a full engine restart: weight load from disk + engine init/CUDA-
+graph capture) vs exclusive deployment (enough GPUs for no switching).
+
+Workflow: Table IV's six LLM invocations across three models (4B planner/
+solver/chat, 0.6B tool calls, 14B writer), serial.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import banner, save_result
+from repro.core.predictor.cost_model import HardwareSpec
+from repro.core.runtime.residency import HierarchicalResidency, ModelState
+from repro.data.apps import APPS, MODELS
+from repro.sim.simulator import default_profiles
+
+HW = HardwareSpec(name="a100-40g", peak_flops=312e12, hbm_bw=1555e9,
+                  hbm_capacity=40e9, host_link_bw=25e9)
+ENGINE_INIT_S = 15.0     # process start + allocator + CUDA-graph capture
+GPU_BUDGET = 36e9
+
+
+def _travel_stages():
+    app = next(a for a in APPS if a.name == "travel_assistant")
+    return [(MODELS[s.model_id], s.prompt_base,
+             s.tool_len if s.p_tool > 0.5 else s.base_len * 1.5)
+            for s in app.stages]
+
+
+def _run_qlm(n_gpus: int, profiles) -> float:
+    """One resident engine per GPU; switching = restart (disk + init)."""
+    owner: List[str] = [""] * n_gpus
+    lru: List[int] = [0] * n_gpus
+    total, tick = 0.0, 0
+    for model, p_len, out_len in _travel_stages():
+        tick += 1
+        if model in owner:
+            g = owner.index(model)
+        else:
+            g = min(range(n_gpus),
+                    key=lambda i: (owner[i] != "", lru[i]))
+            total += (profiles[model].weight_bytes / HW.disk_bw
+                      + ENGINE_INIT_S)
+            owner[g] = model
+        lru[g] = tick
+        total += profiles[model].t_exec(p_len, out_len)
+    return total
+
+
+def _run_maestro(n_gpus: int, profiles) -> float:
+    """Hierarchical residency: weights cached in host RAM, sleeping models
+    keep their device context; eviction is graceful (Algorithm 1)."""
+    nodes = [HierarchicalResidency(profiles, c_gpu=GPU_BUDGET, c_cpu=512e9,
+                                   c_disk=2e12, hw=HW)
+             for _ in range(n_gpus)]
+    for node in nodes:   # weights staged in host RAM (paper's deployment)
+        for m, prof in profiles.items():
+            node.state[m] = ModelState.CPU
+            node.lru["cpu"][m] = prof.weight_bytes
+    total = 0.0
+    for model, p_len, out_len in _travel_stages():
+        g = min(range(n_gpus),
+                key=lambda i: nodes[i].activation_latency(model))
+        ok, t_act = nodes[g].ensure_gpu(model)
+        assert ok
+        total += t_act + profiles[model].t_exec(p_len, out_len)
+    return total
+
+
+def main(fast: bool = False):
+    banner("Table IV — Travel Assistant completion vs GPU budget")
+    profiles = default_profiles(HW)
+    rows: Dict[str, List[float]] = {"maestro": [], "qlm": []}
+    for n in (1, 2, 3):
+        rows["maestro"].append(round(_run_maestro(n, profiles), 1))
+        rows["qlm"].append(round(_run_qlm(n, profiles), 1))
+    print(f"{'method':9s}  1 GPU      2 GPUs     3 GPUs   (seconds)")
+    for pol, vals in rows.items():
+        print(f"{pol:9s}  " + "  ".join(f"{v:8.1f}" for v in vals))
+    cut1 = 1 - rows["maestro"][0] / rows["qlm"][0]
+    cut2 = 1 - rows["maestro"][1] / rows["qlm"][1]
+    print(f"completion cut vs QLM: 1 GPU {cut1*100:.1f}% (paper 70.0%), "
+          f"2 GPUs {cut2*100:.1f}% (paper 38.9%)")
+    assert rows["maestro"][0] < rows["qlm"][0]
+    assert rows["maestro"][1] < rows["qlm"][1]
+    # with enough GPUs both match exclusive deployment
+    assert abs(rows["maestro"][2] - rows["qlm"][2]) / rows["qlm"][2] < 0.65
+    save_result("table4_colocation", {**rows,
+                                      "cut_1gpu_pct": cut1 * 100,
+                                      "cut_2gpu_pct": cut2 * 100})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Shared benchmark plumbing: trace + predictor caching, result output."""
+from __future__ import annotations
+
+import json
+import pickle
+import time
+from pathlib import Path
+
+import numpy as np
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
+CACHE = RESULTS / ".cache"
+
+
+def save_result(name: str, payload) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def banner(title: str) -> None:
+    print(f"\n=== {title} " + "=" * max(0, 68 - len(title)))
+
+
+def get_trace(n_jobs: int, seed: int = 11, **kw):
+    from repro.data.tracegen import generate_trace
+    return generate_trace(n_jobs, seed=seed, **kw)
+
+
+def get_predictor(n_jobs: int = 2500, fast: bool = False):
+    """Train (or load cached) the Maestro predictor on a recorded trace."""
+    CACHE.mkdir(parents=True, exist_ok=True)
+    tag = f"pred_{n_jobs}_{'fast' if fast else 'full'}.pkl"
+    f = CACHE / tag
+    if f.exists():
+        with open(f, "rb") as fh:
+            return pickle.load(fh)
+    from repro.core.predictor import MaestroPred, PredictorConfig
+    from repro.core.predictor.gbdt import GBDTConfig
+    from repro.data.tracegen import stratified_temporal_split
+    jobs = get_trace(n_jobs)
+    train, _ = stratified_temporal_split(jobs)
+    if fast:
+        cfg = PredictorConfig(
+            cls=GBDTConfig(objective="logloss", n_trees=30, max_leaves=7),
+            reg=GBDTConfig(n_trees=40, max_leaves=15))
+    else:
+        cfg = PredictorConfig(
+            cls=GBDTConfig(objective="logloss", n_trees=80, max_leaves=31),
+            reg=GBDTConfig(n_trees=120, max_leaves=31))
+    t0 = time.time()
+    mp = MaestroPred(cfg).fit(
+        [s.obs for s in train],
+        np.array([s.true_len for s in train], float),
+        np.array([float(s.tool_call) for s in train]))
+    print(f"[common] trained predictor on {len(train)} stages "
+          f"({time.time()-t0:.0f}s)")
+    with open(f, "wb") as fh:
+        pickle.dump(mp, fh)
+    return mp

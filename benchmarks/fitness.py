@@ -1,0 +1,50 @@
+"""Table VIII: node-fitness scoring on interactive queueing delay —
+Baseline (load-balancing) vs BinPack-only (gamma=0) vs Maestro-Aff
+(gamma=0.25) on the hybrid 3-local + 2-remote topology."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import banner, get_predictor, get_trace, save_result
+from repro.sim.policies import BaselineLB, BinPackOnly, Maestro
+from repro.sim.simulator import SimConfig, Simulator
+
+# hybrid topology: clusters 0/1 local (3 nodes), cluster 2 remote (2 nodes)
+RTT = np.array([[0.0005, 0.002, 0.120],
+                [0.002, 0.0005, 0.140],
+                [0.120, 0.140, 0.0005]])
+
+
+def main(n_jobs: int = 500, fast: bool = False):
+    banner("Table VIII — cross-cluster fitness scoring")
+    mp = get_predictor(fast=fast)
+    cfg = SimConfig(nodes_per_cluster=(2, 1, 2))
+    rates = [0.5, 1.0, 2.0] if not fast else [1.0]
+    rows = []
+    for rate in rates:
+        row = {"rate": rate}
+        for mk, tag in ((lambda: BaselineLB(mp), "baseline"),
+                        (lambda: BinPackOnly(mp), "binpack"),
+                        (lambda: Maestro(mp, gamma=0.25), "maestro-aff")):
+            jobs = get_trace(n_jobs, rate=rate, seed=41)
+            r = Simulator(jobs, mk(), cfg, rtt=RTT).run()
+            row[tag] = round(r.interactive_queue_delay_s, 3)
+        rows.append(row)
+        print(f"rate={rate}: baseline={row['baseline']:.3f}s "
+              f"binpack={row['binpack']:.3f}s "
+              f"maestro-aff={row['maestro-aff']:.3f}s")
+    # ordering claim: maestro-aff beats baseline at low/mid load and on
+    # average; at saturation (rate 2.0) all policies converge/queue-dominate
+    # (the paper's own gaps shrink to ~8% there)
+    import numpy as _np
+    for row in rows:
+        if row["rate"] <= 1.0:
+            assert row["maestro-aff"] <= row["baseline"] * 1.10, row
+    assert (_np.mean([r["maestro-aff"] for r in rows])
+            <= _np.mean([r["baseline"] for r in rows])), rows
+    save_result("table8_fitness", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

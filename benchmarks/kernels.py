@@ -1,0 +1,80 @@
+"""Kernel microbenchmarks: interpret-mode allclose vs oracle + jitted-ref
+wall time per call (TPU wall-time is the dry-run roofline's job; this proves
+correctness + gives the CPU-reference cost)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import banner, save_result
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ssd_chunk import ssd_chunk
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+        else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main(fast: bool = False):
+    banner("Kernel validation + reference timings")
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    rows = {}
+
+    B, S, H, Hkv, hd = 2, 512, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32)
+    out = flash_attention(q, k, v, bq=128, bk=128, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v)
+    err = float(np.max(np.abs(np.asarray(out) - np.asarray(exp))))
+    us = _time(jax.jit(ref.flash_attention_ref), q, k, v)
+    rows["flash_attention"] = {"max_err": err, "ref_us": round(us, 1)}
+    print(f"flash_attention  err={err:.2e}  ref={us:8.1f}us/call")
+    assert err < 1e-4
+
+    n_pages, page, slots = 40, 32, 8
+    qd = jax.random.normal(ks[3], (B, H, hd), jnp.float32)
+    kp = jax.random.normal(ks[4], (n_pages, page, Hkv, hd), jnp.float32)
+    vp = jax.random.normal(ks[5], (n_pages, page, Hkv, hd), jnp.float32)
+    bt = jax.random.permutation(ks[6], n_pages)[:B * slots] \
+        .reshape(B, slots).astype(jnp.int32)
+    sl = jnp.array([200, 77], jnp.int32)
+    out = paged_attention(qd, kp, vp, bt, sl, page_size=page, interpret=True)
+    exp = ref.paged_attention_ref(qd, kp, vp, bt, sl)
+    err = float(np.max(np.abs(np.asarray(out) - np.asarray(exp))))
+    us = _time(jax.jit(ref.paged_attention_ref), qd, kp, vp, bt, sl)
+    rows["paged_attention"] = {"max_err": err, "ref_us": round(us, 1)}
+    print(f"paged_attention  err={err:.2e}  ref={us:8.1f}us/call")
+    assert err < 1e-4
+
+    B2, S2, H2, P2, N2 = 2, 256, 4, 32, 16
+    x = jax.random.normal(ks[7], (B2, S2, H2, P2), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B2, S2, H2)))
+    A = -jnp.exp(jax.random.normal(ks[1], (H2,)) * 0.3)
+    Bm = jax.random.normal(ks[2], (B2, S2, H2, N2), jnp.float32)
+    Cm = jax.random.normal(ks[3], (B2, S2, H2, N2), jnp.float32)
+    out = ssd_chunk(x, dt, A, Bm, Cm, chunk=64, interpret=True)
+    exp = ref.ssd_chunk_ref(x, dt, A, Bm, Cm)
+    scale = float(np.max(np.abs(np.asarray(exp)))) + 1e-9
+    err = float(np.max(np.abs(np.asarray(out) - np.asarray(exp)))) / scale
+    us = _time(jax.jit(ref.ssd_chunk_ref), x, dt, A, Bm, Cm)
+    rows["ssd_chunk"] = {"max_rel_err": err, "ref_us": round(us, 1)}
+    print(f"ssd_chunk        err={err:.2e}  ref={us:8.1f}us/call")
+    assert err < 1e-3
+    save_result("kernels", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Tables III / VI / VII: tool-intent classification, output-length
+regression, and the prediction-module ablation — Maestro-Pred vs Linear /
+BERT-MLP / Magnus, plus MLP-variant neural baselines for the classifier."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import banner, get_trace, save_result
+from repro.core.predictor import (BertMLPBaseline, GBDT, GBDTConfig,
+                                  IsotonicCalibrator, LinearBaseline, MLP,
+                                  MaestroPred, MagnusBaseline,
+                                  PredictorConfig, classification_metrics,
+                                  regression_metrics)
+from repro.core.predictor.features import featurize_batch
+from repro.data.tracegen import stratified_temporal_split
+
+
+def _data(n_jobs: int):
+    jobs = get_trace(n_jobs)
+    train, test = stratified_temporal_split(jobs)
+    y_tr = np.array([s.true_len for s in train], float)
+    y_te = np.array([s.true_len for s in test], float)
+    t_tr = np.array([float(s.tool_call) for s in train])
+    t_te = np.array([float(s.tool_call) for s in test])
+    return train, test, y_tr, y_te, t_tr, t_te
+
+
+def bench_tool_intent(n_jobs: int = 2500):
+    """Table III: classifier comparison (AUC / F1 / Acc / MSE / logloss)."""
+    banner("Table III — tool-intent classification")
+    train, test, _, _, t_tr, t_te = _data(n_jobs)
+    X_tr = featurize_batch([s.obs for s in train])
+    X_te = featurize_batch([s.obs for s in test])
+    n_val = max(1, len(X_tr) // 7)
+    rows = {}
+
+    m = GBDT(GBDTConfig(objective="logloss", n_trees=120, max_leaves=31)).fit(
+        X_tr[:-n_val], t_tr[:-n_val], X_tr[-n_val:], t_tr[-n_val:])
+    cal = IsotonicCalibrator().fit(m.predict(X_tr[-n_val:]), t_tr[-n_val:])
+    rows["Maestro-Pred"] = classification_metrics(
+        t_te, cal.transform(m.predict(X_te)))
+
+    for name, hidden in (("MLP_64_32", (64, 32)), ("MLP_128_64", (128, 64)),
+                         ("MLP_3layer", (128, 64, 32))):
+        mlp = MLP(hidden=hidden, classifier=True, epochs=30).fit(X_tr, t_tr)
+        rows[name] = classification_metrics(t_te, mlp.predict(X_te))
+
+    for name, m_ in rows.items():
+        print(f"{name:14s} auc={m_['auc']:.4f} f1={m_['f1_macro']:.4f} "
+              f"acc={m_['acc']:.4f} mse={m_['mse']:.4f} "
+              f"logloss={m_['logloss']:.4f} negrec={m_['neg_recall']:.4f}")
+    best_auc = max(rows.values(), key=lambda r: r["auc"])
+    assert rows["Maestro-Pred"]["auc"] >= best_auc["auc"] - 0.02
+    save_result("table3_tool_intent", rows)
+    return rows
+
+
+def bench_length(n_jobs: int = 2500):
+    """Table VI: output-length MAE / R^2 across predictors."""
+    banner("Table VI — output-length prediction")
+    train, test, y_tr, y_te, t_tr, _ = _data(n_jobs)
+    obs_tr = [s.obs for s in train]
+    obs_te = [s.obs for s in test]
+    rows = {}
+    t0 = time.time()
+    mp = MaestroPred().fit(obs_tr, y_tr, t_tr)
+    rows["Maestro-Pred"] = regression_metrics(
+        y_te, mp.predict(obs_te)["length"])
+    rows["Maestro-Pred"]["fit_s"] = round(time.time() - t0, 1)
+    rows["Magnus"] = regression_metrics(
+        y_te, MagnusBaseline().fit(obs_tr, y_tr).predict(obs_te)["length"])
+    rows["BERT-MLP"] = regression_metrics(
+        y_te, BertMLPBaseline().fit(obs_tr, y_tr).predict(obs_te)["length"])
+    rows["Linear"] = regression_metrics(
+        y_te, LinearBaseline().fit(obs_tr, y_tr).predict(obs_te)["length"])
+    for name, m in rows.items():
+        print(f"{name:14s} MAE={m['mae']:8.2f}  R2={m['r2']:+.4f}")
+    mae_cut = 1 - rows["Maestro-Pred"]["mae"] / rows["Magnus"]["mae"]
+    print(f"MAE reduction vs Magnus: {mae_cut*100:.1f}% (paper: 19.2%)")
+    print("note: on this synthetic trace tool-intent is largely recoverable"
+          " from structured features, so the single-stage GBDT (Magnus) is"
+          " near-parity; the two-phase gain concentrates in Table III's"
+          " calibration (logloss) and the ablation (Table VII)")
+    rows["mae_cut_vs_magnus_pct"] = mae_cut * 100
+    # reproduction claim: Maestro-Pred at or near the best regressor, and the
+    # GBDT family far ahead of the neural/linear baselines
+    assert rows["Maestro-Pred"]["mae"] <= rows["Magnus"]["mae"] * 1.06
+    assert rows["Maestro-Pred"]["mae"] < rows["BERT-MLP"]["mae"]
+    assert rows["Linear"]["r2"] < rows["Maestro-Pred"]["r2"]
+    save_result("table6_length", rows)
+    return rows
+
+
+def bench_ablation(n_jobs: int = 2500):
+    """Table VII: w/o classifier (C) and w/o semantic features (BERT)."""
+    banner("Table VII — prediction ablation")
+    train, test, y_tr, y_te, t_tr, _ = _data(n_jobs)
+    obs_tr = [s.obs for s in train]
+    obs_te = [s.obs for s in test]
+    cot_te = np.array([s.obs.cot for s in test])
+    variants = {
+        "Full": PredictorConfig(),
+        "w/o C": PredictorConfig(use_classifier=False),
+        "w/o BERT": PredictorConfig(use_semantic=False),
+    }
+    rows = {}
+    for name, cfg in variants.items():
+        mp = MaestroPred(cfg).fit(obs_tr, y_tr, t_tr)
+        pred = mp.predict(obs_te)["length"]
+        m = regression_metrics(y_te, pred)
+        m["mae_cot"] = regression_metrics(
+            y_te[cot_te], pred[cot_te])["mae"] if cot_te.any() else 0.0
+        m["mae_noncot"] = regression_metrics(
+            y_te[~cot_te], pred[~cot_te])["mae"]
+        rows[name] = m
+        print(f"{name:9s} MAE={m['mae']:8.2f} R2={m['r2']:+.4f} "
+              f"MAE(CoT)={m['mae_cot']:8.2f} MAE(non-CoT)={m['mae_noncot']:8.2f}")
+    assert rows["Full"]["r2"] >= rows["w/o BERT"]["r2"]
+    save_result("table7_ablation", rows)
+    return rows
+
+
+def main(n_jobs: int = 2500):
+    bench_tool_intent(n_jobs)
+    bench_length(n_jobs)
+    bench_ablation(n_jobs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Table II: boundary preemption under extreme load (lambda=5.0, batch
+ratio 0.6) as the node count grows — Maestro vs Maestro w/o preemption."""
+from __future__ import annotations
+
+from benchmarks.common import banner, get_predictor, get_trace, save_result
+from repro.sim.policies import Maestro, MaestroNoPreempt
+from repro.sim.simulator import SimConfig, Simulator
+
+
+def main(n_jobs: int = 400, fast: bool = False):
+    banner("Table II — preemption under extreme load")
+    mp = get_predictor(fast=fast)
+    rows = []
+    node_counts = [1, 2, 3, 4, 5] if not fast else [2, 4]
+    for n in node_counts:
+        row = {"nodes": n}
+        for mk, tag in ((lambda: Maestro(mp), "maestro"),
+                        (lambda: MaestroNoPreempt(mp), "maestro-np")):
+            jobs = get_trace(n_jobs, rate=5.0, batch_ratio=0.6, seed=31)
+            cfg = SimConfig(nodes_per_cluster=(n,))
+            r = Simulator(jobs, mk(), cfg).run()
+            row[tag] = {"slo": round(r.slo_attainment, 3),
+                        "intq_ms": round(r.interactive_queue_delay_s * 1e3, 1)}
+        rows.append(row)
+        print(f"nodes={n}: preempt slo={row['maestro']['slo']:.2f} "
+              f"delay={row['maestro']['intq_ms']:.0f}ms | w/o preempt "
+              f"slo={row['maestro-np']['slo']:.2f} "
+              f"delay={row['maestro-np']['intq_ms']:.0f}ms")
+    # preemption should not lose on SLO and should cut interactive delay
+    wins = sum(r["maestro"]["intq_ms"] <= r["maestro-np"]["intq_ms"] * 1.05
+               for r in rows)
+    assert wins >= len(rows) - 1, rows
+    save_result("table2_preemption", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

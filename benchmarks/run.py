@@ -1,0 +1,60 @@
+"""Benchmark driver — one benchmark per paper table/figure.
+
+  python -m benchmarks.run              # full pass (tens of minutes)
+  python -m benchmarks.run --fast       # reduced sizes (CI / smoke)
+  python -m benchmarks.run --only table5_memory fig10_activation
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+BENCHES = {}
+
+
+def _register():
+    from benchmarks import (activation, colocation, fitness, kernels, memory,
+                            prediction, preemption, scheduling)
+    BENCHES.update({
+        "table3_6_7_prediction": lambda fast: prediction.main(
+            n_jobs=800 if fast else 2500),
+        "fig7_scheduling": lambda fast: scheduling.main(
+            n_jobs=250 if fast else 600, fast=fast),
+        "table2_preemption": lambda fast: preemption.main(
+            n_jobs=200 if fast else 400, fast=fast),
+        "table4_colocation": lambda fast: colocation.main(fast=fast),
+        "table5_memory": lambda fast: memory.main(fast=fast),
+        "table8_fitness": lambda fast: fitness.main(
+            n_jobs=250 if fast else 500, fast=fast),
+        "fig10_activation": lambda fast: activation.main(fast=fast),
+        "kernels": lambda fast: kernels.main(fast=fast),
+    })
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    _register()
+    names = args.only or list(BENCHES)
+    failures = []
+    t_all = time.time()
+    for name in names:
+        t0 = time.time()
+        try:
+            BENCHES[name](args.fast)
+            print(f"[run] {name} OK ({time.time()-t0:.0f}s)")
+        except Exception as e:
+            failures.append((name, e))
+            traceback.print_exc()
+            print(f"[run] {name} FAILED: {e}")
+    print(f"\n[run] {len(names)-len(failures)}/{len(names)} benchmarks OK "
+          f"({time.time()-t_all:.0f}s total)")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

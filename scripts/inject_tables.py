@@ -1,0 +1,33 @@
+"""Inject rendered roofline tables into EXPERIMENTS.md placeholders."""
+import re
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+from repro.launch.report import table  # noqa: E402
+
+DOC = Path(__file__).resolve().parents[1] / "EXPERIMENTS.md"
+
+MARKERS = {
+    "<!-- BASELINE_TABLE -->": ("single", "tp_sp"),
+    "<!-- OPTIMIZED_TABLE -->": ("single", "fsdp_cp"),
+    "<!-- MULTIPOD_TABLE -->": ("multi", "tp_sp"),
+}
+
+
+def main():
+    text = DOC.read_text()
+    for marker, (mesh, mode) in MARKERS.items():
+        block = f"{marker}\n{table(mesh, mode)}"
+        if marker in text:
+            text = text.replace(marker, block)
+        else:
+            # refresh: replace marker + following table lines
+            pat = re.compile(re.escape(marker) + r"(\n\|[^\n]*)*")
+            text = pat.sub(lambda _: block, text)
+    DOC.write_text(text)
+    print("tables injected")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    SHAPES,
+    ArchConfig,
+    CrossAttnConfig,
+    EncoderConfig,
+    MoEConfig,
+    SSMConfig,
+    all_cells,
+    get_config,
+    input_specs,
+    list_configs,
+    register,
+)
+
+__all__ = [
+    "SHAPES", "ArchConfig", "CrossAttnConfig", "EncoderConfig", "MoEConfig",
+    "SSMConfig", "all_cells", "get_config", "input_specs", "list_configs",
+    "register",
+]

@@ -1,0 +1,374 @@
+"""Architecture configuration system.
+
+Every servable/trainable model in the zoo is described by an ``ArchConfig``.
+Configs are pure data (dataclasses) — model code in ``repro.models`` consumes
+them; ``input_specs()`` produces ShapeDtypeStruct stand-ins for the dry-run
+(never allocates device memory).
+
+Families:
+  dense   — decoder-only transformer (GQA, optional qk_norm / qkv bias)
+  moe     — dense skeleton with MoE FFN layers
+  ssm     — attention-free Mamba2 (SSD) stack
+  hybrid  — interleaved Mamba2 + attention (+ optional MoE)
+  encdec  — encoder-decoder (Whisper-style); frontend stubbed as frame embeddings
+  vlm     — decoder-only with interleaved cross-attention layers over patch embeds
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Shape suite (assigned): every LM arch is paired with these four shapes.
+# ---------------------------------------------------------------------------
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    # Apply MoE on layers where (layer_idx % every) == offset.
+    every: int = 1
+    offset: int = 0
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    chunk: int = 256
+    n_groups: int = 1  # B/C shared across heads per group (Mamba2 default)
+    conv_dim: int = 4  # depthwise conv width (stubbed as small causal conv)
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossAttnConfig:
+    """Interleaved cross-attention (VLM) or enc-dec cross-attention."""
+    every: int = 5          # cross-attn layer each `every` layers (vlm)
+    offset: int = 0
+    n_ctx_tokens: int = 1601  # patch / frame embedding count
+    ctx_dim: int = 0          # 0 => d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    n_layers: int = 24
+    n_frames: int = 1500   # precomputed frame embeddings (conv frontend stubbed)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 => d_model // n_heads
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    ffn_gelu: bool = False       # 2-matrix GELU MLP instead of SwiGLU
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    cross_attn: Optional[CrossAttnConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    # hybrid: attention on layers where (idx % attn_every) == attn_offset,
+    # Mamba2 elsewhere. attn_every=1 => all attention.
+    attn_every: int = 1
+    attn_offset: int = 0
+    max_seq_len: int = 1 << 20
+    dtype: Any = jnp.bfloat16
+    # Source tag from the assignment table.
+    source: str = ""
+
+    # ----- derived ---------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def is_attn_layer(self, idx: int) -> bool:
+        if self.family == "ssm":
+            return False
+        if self.family == "hybrid":
+            return idx % self.attn_every == self.attn_offset
+        return True
+
+    def is_moe_layer(self, idx: int) -> bool:
+        if self.moe is None:
+            return False
+        return idx % self.moe.every == self.moe.offset
+
+    def is_cross_layer(self, idx: int) -> bool:
+        if self.cross_attn is None or self.family == "encdec":
+            return False
+        return idx % self.cross_attn.every == self.cross_attn.offset
+
+    @property
+    def layer_pattern_period(self) -> int:
+        """Smallest period covering the layer heterogeneity (for scan grouping)."""
+        p = 1
+        if self.family == "hybrid":
+            p = _lcm(p, self.attn_every)
+        if self.moe is not None:
+            p = _lcm(p, self.moe.every)
+        if self.cross_attn is not None and self.family != "encdec":
+            p = _lcm(p, self.cross_attn.every)
+        return p
+
+    @property
+    def n_attn_layers(self) -> int:
+        return sum(1 for i in range(self.n_layers) if self.is_attn_layer(i))
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic sequence handling => long_500k applicable."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs are decoders or enc-dec
+
+    # ----- parameter / memory model (analytic; also cross-checked in tests) --
+    def param_count(self) -> int:
+        """Total parameters (embedding included)."""
+        d, hd = self.d_model, self.head_dim_
+        total = self.vocab * d  # embed
+        if not self.tie_embeddings:
+            total += self.vocab * d  # lm head
+        for i in range(self.n_layers):
+            if self.is_attn_layer(i):
+                qkv = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd)
+                o = (self.n_heads * hd) * d
+                if self.qkv_bias:
+                    qkv += (self.n_heads + 2 * self.n_kv_heads) * hd
+                total += qkv + o + d  # + attn norm (ffn norm in _ffn_params)
+                if self.qk_norm:
+                    total += 2 * hd
+            elif self.ssm is not None:
+                total += _ssm_params(self, d)
+            if self.is_cross_layer(i):
+                cd = self.cross_attn.ctx_dim or d
+                total += d * (self.n_heads * hd) + 2 * cd * (self.n_kv_heads * hd) \
+                    + (self.n_heads * hd) * d + d
+            total += _ffn_params(self, i, d)
+        total += d  # final norm
+        if self.encoder is not None:
+            enc = 0
+            for _ in range(self.encoder.n_layers):
+                qkv = self.d_model * (self.n_heads * hd) * 3
+                o = (self.n_heads * hd) * self.d_model
+                ffn = 2 * self.d_model * self.d_ff
+                enc += qkv + o + ffn + 2 * self.d_model
+            total += enc
+            # decoder cross-attn blocks (one per decoder layer)
+            total += self.n_layers * (
+                self.d_model * (self.n_heads * hd)
+                + 2 * self.d_model * (self.n_kv_heads * hd)
+                + (self.n_heads * hd) * self.d_model + self.d_model)
+            total += self.d_model  # encoder final norm
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if self.moe is None:
+            return self.param_count()
+        total = self.param_count()
+        # subtract non-routed expert weights
+        per_expert = 3 * self.d_model * self.moe.d_ff_expert
+        n_moe_layers = sum(1 for i in range(self.n_layers) if self.is_moe_layer(i))
+        inactive = n_moe_layers * (self.moe.n_experts - self.moe.top_k) * per_expert
+        return total - inactive
+
+    def kv_bytes_per_token(self, dtype_bytes: int = 2) -> int:
+        """α(M) of Eq. 3 — per-token KV footprint (hybrid: attn layers only;
+        ssm: 0, state is O(1))."""
+        return (self.n_attn_layers * 2 * self.n_kv_heads * self.head_dim_
+                * dtype_bytes)
+
+    def ssm_state_bytes(self, dtype_bytes: int = 4) -> int:
+        """Constant per-sequence recurrent state (SSM / hybrid)."""
+        if self.ssm is None:
+            return 0
+        n_ssm = self.n_layers - self.n_attn_layers
+        h = self.ssm.n_heads(self.d_model)
+        return n_ssm * h * self.ssm.head_dim * self.ssm.d_state * dtype_bytes
+
+    def weight_bytes(self, dtype_bytes: int = 2) -> int:
+        return self.param_count() * dtype_bytes
+
+    # ----- shape suite -----------------------------------------------------
+    def applicable_shapes(self) -> List[str]:
+        names = ["train_4k", "prefill_32k", "decode_32k"]
+        if self.supports_long_context:
+            names.append("long_500k")
+        return names
+
+    def skipped_shapes(self) -> Dict[str, str]:
+        if self.supports_long_context:
+            return {}
+        return {"long_500k": "pure full-attention arch: O(L^2)/dense-KV at 512k "
+                             "is out of contract (see DESIGN.md §4)"}
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant of the same family (tiny but structurally faithful)."""
+        changes: Dict[str, Any] = dict(
+            name=self.name + "-smoke",
+            n_layers=min(self.n_layers, 2 * self.layer_pattern_period),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=32,
+            d_ff=256,
+            vocab=512,
+            dtype=jnp.float32,
+            max_seq_len=4096,
+        )
+        if self.moe is not None:
+            changes["moe"] = dataclasses.replace(
+                self.moe, n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2), d_ff_expert=128)
+        if self.ssm is not None:
+            changes["ssm"] = dataclasses.replace(
+                self.ssm, d_state=16, head_dim=16, chunk=32)
+        if self.cross_attn is not None:
+            changes["cross_attn"] = dataclasses.replace(
+                self.cross_attn, n_ctx_tokens=24, ctx_dim=0)
+        if self.encoder is not None:
+            changes["encoder"] = dataclasses.replace(
+                self.encoder, n_layers=2, n_frames=24)
+        return dataclasses.replace(self, **changes)
+
+
+def _lcm(a: int, b: int) -> int:
+    import math
+    return a * b // math.gcd(a, b)
+
+
+def _ffn_params(cfg: ArchConfig, idx: int, d: int) -> int:
+    if cfg.is_moe_layer(idx):
+        return cfg.moe.n_experts * 3 * d * cfg.moe.d_ff_expert + d * cfg.moe.n_experts + d
+    if cfg.family == "ssm" or (cfg.family == "hybrid" and not cfg.is_attn_layer(idx)):
+        return 0  # Mamba2 block subsumes the FFN role
+    if cfg.ffn_gelu:
+        return 2 * d * cfg.d_ff + d  # GELU: up+down, + norm
+    return 3 * d * cfg.d_ff + d  # SwiGLU: gate+up+down, + norm
+
+
+def _ssm_params(cfg: ArchConfig, d: int) -> int:
+    s = cfg.ssm
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    in_proj = d * (2 * di + 2 * s.n_groups * s.d_state + h)  # x, z, B, C, dt
+    out_proj = di * d
+    extras = di * s.conv_dim + 3 * h + di + d  # conv, A/dt_bias/D, norms
+    return in_proj + out_proj + extras
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins (dry-run; no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract inputs for the given (arch, shape) cell.
+
+    train  -> tokens/labels [B, S]
+    prefill-> tokens [B, S]
+    decode -> tokens [B, 1] + positions [B] (the KV cache / SSM state is a
+              separate argument produced by cache_specs()).
+    Modality frontends are stubs: precomputed frame/patch embeddings.
+    """
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    i32 = jnp.int32
+    if sh["kind"] == "train":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    elif sh["kind"] == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:  # decode: one new token against a cache of length s
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "positions": jax.ShapeDtypeStruct((b,), i32),
+        }
+    if cfg.cross_attn is not None and cfg.family == "vlm":
+        cd = cfg.cross_attn.ctx_dim or cfg.d_model
+        out["ctx_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.cross_attn.n_ctx_tokens, cd), cfg.dtype)
+    if cfg.encoder is not None:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder.n_frames, cfg.d_model), cfg.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> List[str]:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+_ARCH_MODULES = [
+    "qwen3_32b", "starcoder2_15b", "qwen3_8b", "qwen1_5_110b", "whisper_medium",
+    "llama3_2_vision_11b", "mamba2_2_7b", "moonshot_v1_16b_a3b",
+    "llama4_scout_17b_a16e", "jamba_v0_1_52b",
+]
+
+
+def _load_all() -> None:
+    import importlib
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    """Every (arch, shape) cell in the assignment — including skip-annotated ones."""
+    _load_all()
+    cells = []
+    for name in sorted(_REGISTRY):
+        for shape in SHAPES:
+            cells.append((name, shape))
+    return cells

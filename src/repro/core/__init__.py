@@ -1,0 +1,2 @@
+"""Maestro's contribution: agent-aware cost prediction, node-level
+multi-model runtime, and workload-aware cross-cluster scheduling."""

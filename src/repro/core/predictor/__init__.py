@@ -1,0 +1,14 @@
+from repro.core.predictor.cost_model import (A100_40G, HardwareSpec,
+                                             ModelProfile, profile_from_arch,
+                                             synthetic_profile)
+from repro.core.predictor.features import (StageObservation, featurize,
+                                           featurize_batch,
+                                           semantic_embedding)
+from repro.core.predictor.gbdt import GBDT, GBDTConfig
+from repro.core.predictor.isotonic import IsotonicCalibrator
+from repro.core.predictor.length_model import (BertMLPBaseline,
+                                               LinearBaseline, MLP,
+                                               MaestroPred, MagnusBaseline,
+                                               PredictorConfig,
+                                               classification_metrics,
+                                               regression_metrics)

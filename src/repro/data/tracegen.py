@@ -1,0 +1,169 @@
+"""Multi-agent workflow trace generation (§IV.A).
+
+Instantiates jobs from the Table-I templates with Poisson arrivals, unrolls
+loops / fan-outs into stage DAGs, and samples ground-truth prompt/output
+lengths with learnable structure:
+
+  L ~ tool-call?  LogNormal(ln tool_len, 0.35)
+      otherwise   LogNormal(ln base_len * (1 + complexity), sigma + 0.35*cot)
+
+``complexity`` is a latent in [0,1] EXPRESSED IN THE PROMPT TEXT via signal
+vocabulary — recoverable only through the semantic encoder (drives the
+Table-VII ablation). The batch ratio can be re-weighted to sweep Fig. 7's
+x-axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.predictor.features import StageObservation
+from repro.data.apps import APPS, APP_ID, MODELS, ROLE_ID, AppTemplate
+
+_FILLER = ("the a of to and on for with into from about please could review "
+           "data result answer item report note info step check list").split()
+_COMPLEX_WORDS = ("thorough detailed comprehensive intricate elaborate "
+                  "multifaceted exhaustive rigorous").split()
+_SIMPLE_WORDS = "brief quick short simple concise minimal".split()
+_TOPIC = ("travel menu booking flight code bug patch news market translation "
+          "meeting schedule health recipe budget analysis").split()
+
+
+@dataclasses.dataclass
+class StageRecord:
+    job_id: int
+    stage_id: int
+    deps: List[int]
+    obs: StageObservation
+    interactive: bool
+    # ground truth (hidden from the scheduler until completion)
+    true_len: int
+    tool_call: bool
+
+    @property
+    def model(self) -> str:
+        return MODELS[self.obs.model_id]
+
+
+@dataclasses.dataclass
+class JobRecord:
+    job_id: int
+    app: str
+    interactive: bool
+    arrival_s: float
+    stages: List[StageRecord]
+    deadline_s: float = 0.0   # filled by the SLO profiler
+
+
+def _prompt_text(rng, role: str, complexity: float, n_words: int) -> str:
+    total = min(160, max(16, n_words // 8))
+    # complexity expressed as a DENSITY of signal vocabulary (so the
+    # window-mean-pooled embedding amplitude tracks it at any prompt length)
+    n_sig = int(round(complexity * 0.35 * total))
+    n_simple = int(round((1.0 - complexity) * 0.15 * total))
+    words = list(rng.choice(_COMPLEX_WORDS, n_sig))
+    words += list(rng.choice(_SIMPLE_WORDS, n_simple))
+    words += list(rng.choice(_TOPIC, 3))
+    words += list(rng.choice(_FILLER, max(4, total - len(words))))
+    rng.shuffle(words)
+    return " ".join(words)
+
+
+def generate_trace(n_jobs: int, rate: float = 1.0,
+                   batch_ratio: Optional[float] = None,
+                   seed: int = 0) -> List[JobRecord]:
+    """Poisson arrivals at `rate` jobs/s. batch_ratio rebalances the app mix
+    (None keeps Table-I proportions)."""
+    rng = np.random.default_rng(seed)
+    weights = np.array([a.weight for a in APPS])
+    if batch_ratio is not None:
+        is_b = np.array([not a.interactive for a in APPS])
+        w = weights.copy()
+        w[is_b] *= batch_ratio / max(w[is_b].sum(), 1e-9)
+        w[~is_b] *= (1 - batch_ratio) / max(w[~is_b].sum(), 1e-9)
+        weights = w
+    weights = weights / weights.sum()
+
+    jobs: List[JobRecord] = []
+    t = 0.0
+    sid = 0
+    for j in range(n_jobs):
+        t += rng.exponential(1.0 / rate)
+        app = APPS[rng.choice(len(APPS), p=weights)]
+        stages: List[StageRecord] = []
+        # unroll the template (loops + fanout) into a concrete DAG
+        tmpl_to_last: Dict[int, List[int]] = {}  # template idx -> stage ids
+        invocation = 0
+        for ti, st in enumerate(app.stages):
+            dep_ids: List[int] = []
+            for d in st.deps:
+                dep_ids += tmpl_to_last.get(d, [])
+            copies = st.fanout if st.fanout > 1 else 1
+            ids = []
+            for c in range(copies):
+                reps = 1
+                while st.loop > 0 and rng.random() < st.loop and reps < 4:
+                    reps += 1
+                prev = list(dep_ids)
+                for r in range(reps):
+                    complexity = float(rng.random())
+                    tool_call = bool(st.tools_available > 0
+                                     and rng.random() < st.p_tool)
+                    if tool_call:
+                        L = rng.lognormal(np.log(st.tool_len), 0.25)
+                    else:
+                        # complexity (expressed in the prompt text) drives a
+                        # ~6x dynamic range; residual lognormal noise is wider
+                        # under CoT (heavy tail, Observation-1 / Fig. 1)
+                        sig = 0.42 * st.sigma + (0.22 if st.cot else 0.0)
+                        L = rng.lognormal(
+                            np.log(st.base_len * (0.4 + 2.2 * complexity)), sig)
+                    L = int(np.clip(L, 4, 8192))
+                    P = int(np.clip(rng.lognormal(
+                        np.log(st.prompt_base), 0.4), 16, 16384))
+                    obs = StageObservation(
+                        app=APP_ID[app.name], role=ROLE_ID[st.role],
+                        position=ti / max(len(app.stages) - 1, 1),
+                        invocation_idx=invocation,
+                        tools_available=st.tools_available,
+                        cot=st.cot, prompt_len=P, model_id=st.model_id,
+                        text=_prompt_text(rng, st.role, complexity, P),
+                        src_cluster=int(rng.integers(0, 3)))
+                    rec = StageRecord(job_id=j, stage_id=sid, deps=prev,
+                                      obs=obs, interactive=app.interactive,
+                                      true_len=L, tool_call=tool_call)
+                    stages.append(rec)
+                    prev = [sid]
+                    sid += 1
+                    invocation += 1
+                ids += prev
+            tmpl_to_last[ti] = ids
+        jobs.append(JobRecord(job_id=j, app=app.name,
+                              interactive=app.interactive,
+                              arrival_s=t, stages=stages))
+    return jobs
+
+
+def flatten_stages(jobs: Sequence[JobRecord]) -> List[StageRecord]:
+    return [s for j in jobs for s in j.stages]
+
+
+def stratified_temporal_split(jobs: Sequence[JobRecord], test_frac: float = 0.2
+                              ) -> Tuple[List[StageRecord], List[StageRecord]]:
+    """§IV.A: within each (agent, tool-use, thinking-mode) group, the latest
+    test_frac of records are the test set."""
+    groups: Dict[Tuple, List[StageRecord]] = {}
+    for s in flatten_stages(jobs):
+        groups.setdefault(
+            (s.obs.role, s.tool_call, s.obs.cot), []).append(s)
+    train, test = [], []
+    for g in groups.values():
+        g = sorted(g, key=lambda s: s.stage_id)
+        k = max(1, int(len(g) * test_frac))
+        train += g[:-k]
+        test += g[-k:]
+    train.sort(key=lambda s: s.stage_id)
+    test.sort(key=lambda s: s.stage_id)
+    return train, test

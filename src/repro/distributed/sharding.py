@@ -1,0 +1,136 @@
+"""Logical-axis sharding rules and the ShardingCtx threaded through models.
+
+Meshes (see repro.launch.mesh):
+    single-pod : (data=16, model=16)            axes ("data", "model")
+    multi-pod  : (pod=2, data=16, model=16)     axes ("pod", "data", "model")
+
+Logical axes:
+    "fsdp"  — ZeRO-3 parameter sharding over ("pod","data")
+    "tp"    — tensor parallel over "model"
+    "exp"   — expert parallel over "model"
+    "batch" — activation batch over ("pod","data")
+    "sp"    — activation sequence over "model" (Megatron-SP residual stream)
+    "kv_sp" — decode KV cache sequence over "model" (flash-decode combine)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_rules(mesh: Optional[Mesh]) -> Dict[Optional[str], Any]:
+    """Map logical axes -> mesh axes for the given mesh (None => no sharding)."""
+    if mesh is None:
+        return {}
+    names = mesh.axis_names
+    if "pod" in names:
+        dp: Any = ("pod", "data")
+    else:
+        dp = "data"
+    return {
+        "fsdp": dp,
+        "batch": dp,
+        "tp": "model",
+        "exp": "model",
+        "sp": "model",
+        "kv_sp": "model",
+        "stack": None,
+        None: None,
+    }
+
+
+def _divides(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    """Applies logical-axis sharding constraints; no-op when mesh is None.
+
+    ``cs(x, *axes)`` constrains array ``x`` so that dim i is sharded along the
+    mesh axes that logical axis ``axes[i]`` maps to — skipping axes whose mesh
+    extent does not divide the dim (e.g. batch=1 long-context decode).
+
+    ``mode`` selects the distribution strategy for activations (parameters
+    are 2D-sharded identically in both):
+      "tp_sp"   — paper-era Megatron tensor-parallel + sequence-parallel:
+                  heads/d_ff sharded over "model", activations gathered to
+                  full-seq around attention/FFN (the BASELINE).
+      "fsdp_cp" — ZeRO-3 + sequence-context-parallelism: activations stay
+                  (batch x seq)-sharded everywhere, weights are all-gathered
+                  per layer (overlappable), attention flash-scans over
+                  gathered K/V (GQA keeps them small). The beyond-paper
+                  optimized mode (see EXPERIMENTS.md §Perf).
+    """
+    mesh: Optional[Mesh] = None
+    mode: str = "tp_sp"
+
+    def __post_init__(self):
+        self.rules = mesh_rules(self.mesh)
+
+    @property
+    def enabled(self) -> bool:
+        return self.mesh is not None and self.mesh.size > 1
+
+    def axis_size(self, logical: Optional[str]) -> int:
+        if not self.enabled or logical is None:
+            return 1
+        mesh_axes = self.rules.get(logical)
+        if mesh_axes is None:
+            return 1
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        size = 1
+        for a in mesh_axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    def spec(self, *axes: Optional[str], dims: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for logical axes; if dims given, drop non-dividing axes."""
+        entries = []
+        for i, a in enumerate(axes):
+            mesh_axes = self.rules.get(a) if self.enabled else None
+            if mesh_axes is not None and dims is not None:
+                if not _divides(dims[i], self.axis_size(a)):
+                    mesh_axes = None
+            entries.append(mesh_axes)
+        return P(*entries)
+
+    def cs(self, x: jax.Array, *axes: Optional[str]) -> jax.Array:
+        if not self.enabled:
+            return x
+        assert len(axes) == x.ndim, (axes, x.shape)
+        spec = self.spec(*axes, dims=x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def named(self, spec: P) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+    # -- shard_map support (flash-decode island) ----------------------------
+    @property
+    def tp_axis(self) -> Optional[str]:
+        return "model" if (self.enabled and "model" in self.mesh.axis_names) else None
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        if not self.enabled:
+            return ()
+        return ("pod", "data") if "pod" in self.mesh.axis_names else ("data",)
+
+
+def param_shardings(mesh: Optional[Mesh], defs):
+    """PartitionSpec tree (or NamedSharding tree) for a Leaf-def tree."""
+    from repro.models.common import pspec_tree
+    rules = mesh_rules(mesh)
+    return pspec_tree(defs, rules)
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))

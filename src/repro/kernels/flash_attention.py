@@ -1,0 +1,104 @@
+"""Pallas TPU flash attention (prefill hot-spot).
+
+Grid (batch, q_heads, q_blocks, kv_blocks); the kv dimension is innermost —
+TPU executes the grid sequentially over it, so the online-softmax state
+(m, l, acc) lives in VMEM scratch and persists across kv steps. K/V are
+staged HBM->VMEM per (bq x bk) tile via BlockSpec; GQA is handled in the
+K/V index_map (kv head = q head // group) so the cache is never repeated.
+
+Block sizes default to 512x512 tiles with 128-lane head_dim — MXU-aligned
+(multiples of 128 on both contracting dims).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, causal: bool, bq: int, bk: int,
+                  n_kv_blocks: int):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # kv block (sequential innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _compute():
+        q = q_ref[0, :, 0, :]                      # [bq, hd]
+        k = k_ref[0, :, 0, :]                      # [bk, hd]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bk]
+        if causal:
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+        acc_scr[...] = (acc_scr[...] * alpha
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+
+    if causal:
+        # skip fully-masked tiles (query block strictly before kv block)
+        pl.when(j * bk <= (i + 1) * bq - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, :, 0, :] = (acc_scr[...]
+                             / jnp.maximum(l_scr[...], 1e-30)
+                             ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, bq: int = 512, bk: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q [B, Sq, H, hd]; k/v [B, Sk, Hkv, hd] (Hkv divides H). -> [B,Sq,H,hd]."""
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    nq, nk = Sq // bq, Sk // bk
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel, scale=hd ** -0.5, causal=causal, bq=bq, bk=bk,
+        n_kv_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, i, j: (b, j, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, i, j: (b, j, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,57 @@
+"""Jitted dispatch wrappers: Pallas kernel on TPU, interpret-mode Pallas for
+CPU validation, jnp reference as the portable fallback.
+
+``use_pallas()`` decides per-backend; models call these wrappers so the same
+code path serves the TPU production build, the CPU dry-run (jnp) and the
+interpret-mode kernel tests.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
+from repro.kernels import ref as _ref
+from repro.kernels import ssd_chunk as _ssd
+
+_FORCE = {"mode": None}   # None=auto | "pallas" | "interpret" | "ref"
+
+
+def set_mode(mode):
+    assert mode in (None, "pallas", "interpret", "ref")
+    _FORCE["mode"] = mode
+
+
+def _mode() -> str:
+    if _FORCE["mode"]:
+        return _FORCE["mode"]
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def flash_attention(q, k, v, causal: bool = True, **kw):
+    m = _mode()
+    if m == "pallas":
+        return _fa.flash_attention(q, k, v, causal=causal, **kw)
+    if m == "interpret":
+        return _fa.flash_attention(q, k, v, causal=causal, interpret=True, **kw)
+    return _ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def paged_attention(q, k_pages, v_pages, block_table, seq_lens, **kw):
+    m = _mode()
+    if m == "pallas":
+        return _pa.paged_attention(q, k_pages, v_pages, block_table,
+                                   seq_lens, **kw)
+    if m == "interpret":
+        return _pa.paged_attention(q, k_pages, v_pages, block_table,
+                                   seq_lens, interpret=True, **kw)
+    return _ref.paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens)
+
+
+def ssd_chunk(x, dt, A, Bm, Cm, **kw):
+    m = _mode()
+    if m == "pallas":
+        return _ssd.ssd_chunk(x, dt, A, Bm, Cm, **kw)
+    if m == "interpret":
+        return _ssd.ssd_chunk(x, dt, A, Bm, Cm, interpret=True, **kw)
+    return _ref.ssd_chunk_ref(x, dt, A, Bm, Cm)

@@ -1,0 +1,109 @@
+"""Pallas TPU paged decode attention — the serving hot-spot behind Maestro's
+elastic KV pool (§III.C spatial multiplexing).
+
+One query token per sequence attends to its KV pages through a block table.
+Grid (batch, page_slots); the page slot dimension is innermost/sequential, so
+online-softmax state persists in VMEM scratch. The block table and per-seq
+lengths are scalar-prefetched (PrefetchScalarGridSpec) and drive the K/V page
+BlockSpec index_maps — pages are fetched HBM->VMEM exactly once, in block-
+table order, with no gather materialization.
+
+GQA: q [B, H, hd] is grouped as [Hkv, g, hd] inside the kernel; K/V pages
+keep their native [page, Hkv, hd] layout (never repeated).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(block_table, seq_lens, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, page_size: int, n_slots: int,
+                  scale: float):
+    b = pl.program_id(0)
+    s = pl.program_id(1)          # page slot (sequential)
+
+    @pl.when(s == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    seq_len = seq_lens[b]
+    n_used = pl.cdiv(seq_len, page_size)
+
+    @pl.when(s < n_used)
+    def _compute():
+        q = q_ref[0]                                   # [H, hd]
+        k = k_ref[0]                                   # [page, Hkv, hd]
+        v = v_ref[0]
+        H, hd = q.shape
+        Hkv = k.shape[1]
+        g = H // Hkv
+        qg = q.reshape(Hkv, g, hd).astype(jnp.float32)
+        kf = k.astype(jnp.float32)
+        # scores [Hkv, g, page]
+        sc = jax.lax.dot_general(
+            qg, kf, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * scale
+        pos = s * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, sc.shape, 2)
+        sc = jnp.where(pos < seq_len, sc, NEG_INF)
+        m_prev = m_scr[...]                            # [Hkv, g, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=2, keepdims=True))
+        p = jnp.exp(sc - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=2, keepdims=True)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((2,), (0,)), ((0,), (1,))))
+        acc_scr[...] = acc_scr[...] * alpha + pv       # [Hkv, g, hd]
+
+    @pl.when(s == n_slots - 1)
+    def _finalize():
+        acc = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        H, hd = o_ref.shape[1], o_ref.shape[2]
+        o_ref[0] = acc.reshape(H, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("page_size", "interpret"))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_table: jax.Array, seq_lens: jax.Array,
+                    page_size: int = 64, interpret: bool = False) -> jax.Array:
+    """q [B, H, hd]; {k,v}_pages [n_pages, page_size, Hkv, hd];
+    block_table [B, max_slots] int32; seq_lens [B] int32. -> [B, H, hd]."""
+    B, H, hd = q.shape
+    Hkv = k_pages.shape[2]
+    n_slots = block_table.shape[1]
+    grid = (B, n_slots)
+    kernel = functools.partial(_paged_kernel, page_size=page_size,
+                               n_slots=n_slots, scale=hd ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, s, bt, sl: (b, 0, 0)),
+            pl.BlockSpec((1, page_size, Hkv, hd),
+                         lambda b, s, bt, sl: (bt[b, s], 0, 0, 0)),
+            pl.BlockSpec((1, page_size, Hkv, hd),
+                         lambda b, s, bt, sl: (bt[b, s], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, s, bt, sl: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, H // Hkv, 1), jnp.float32),
+            pltpu.VMEM((Hkv, H // Hkv, 1), jnp.float32),
+            pltpu.VMEM((Hkv, H // Hkv, hd), jnp.float32),
+        ],
+    )
+    fn = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret)
+    return fn(block_table, seq_lens, q, k_pages, v_pages)

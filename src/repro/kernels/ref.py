@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q [B,Sq,H,hd]; k/v [B,Sk,Hkv,hd]."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    if causal:
+        Sk = k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens):
+    """q [B,H,hd]; pages [n_pages, page, Hkv, hd]; block_table [B,slots]."""
+    B, H, hd = q.shape
+    n_pages, page, Hkv, _ = k_pages.shape
+    slots = block_table.shape[1]
+    # gather each sequence's pages into a contiguous [B, slots*page, Hkv, hd]
+    k = k_pages[block_table].reshape(B, slots * page, Hkv, hd)
+    v = v_pages[block_table].reshape(B, slots * page, Hkv, hd)
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    valid = jnp.arange(slots * page)[None, :] < seq_lens[:, None]
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_chunk_ref(x, dt, A, Bm, Cm):
+    """Sequential (non-chunked) SSD recurrence — the exact semantics:
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ; y_t = C_t . h_t.
+    x [B,S,H,P]; dt [B,S,H]; A [H]; Bm/Cm [B,S,H,N]."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp          # [B,H,P], [B,H], [B,H,N], [B,H,N]
+        dA = jnp.exp(dtt * A[None, :])
+        h = h * dA[..., None, None] + jnp.einsum("bhn,bhp->bhnp", bt,
+                                                 xt * dtt[..., None])
+        y = jnp.einsum("bhn,bhnp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          Bm.swapaxes(0, 1).astype(jnp.float32),
+          Cm.swapaxes(0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+does not touch jax device state — the dry-run must set XLA_FLAGS before any
+device initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = data * model
+    if len(jax.devices()) < n:
+        raise ValueError(f"need {n} devices, have {len(jax.devices())}")
+    return jax.make_mesh((data, model), ("data", "model"))

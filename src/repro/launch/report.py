@@ -1,0 +1,52 @@
+"""Render the EXPERIMENTS.md roofline tables from results/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.launch.report [--mode tp_sp|fsdp_cp] [--mesh single|multi]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def table(mesh: str = "single", mode: str = "tp_sp") -> str:
+    d = RESULTS / (mesh if mode == "tp_sp" else f"{mesh}-{mode}")
+    lines = [
+        "| arch | shape | bound | compute (ms) | memory (ms) | collective "
+        "(ms) | peak GB/chip | fits v5e | useful-FLOP ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — "
+                         f"| — | — | skipped (sub-quadratic contract) |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | |")
+            continue
+        rf = r["roofline"]
+        mem = r.get("memory", {})
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['bottleneck']} "
+            f"| {rf['compute_s']*1e3:.1f} | {rf['memory_s']*1e3:.1f} "
+            f"| {rf['collective_s']*1e3:.1f} "
+            f"| {mem.get('peak_bytes_per_device', 0)/1e9:.2f} "
+            f"| {'yes' if mem.get('fits_v5e_16g') else 'NO'} "
+            f"| {rf.get('useful_flop_ratio', 0):.2f} "
+            f"| {rf.get('roofline_fraction', 0):.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--mode", default="tp_sp")
+    args = ap.parse_args()
+    print(table(args.mesh, args.mode))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, in seconds:
+
+    compute    = HLO_FLOPs_per_chip   / PEAK_FLOPS
+    memory     = HLO_bytes_per_chip   / HBM_BW
+    collective = traffic_per_chip     / ICI_BW
+
+``cost_analysis()`` on a post-SPMD compiled executable reports the per-device
+program, so its flops/bytes are already per-chip. Collective traffic is NOT in
+cost_analysis — we parse the optimized HLO and apply ring-algorithm byte
+multipliers per op (documented next to each).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+HBM_CAP = 16e9             # v5e HBM capacity
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = (\([^)]*\)|\S+) "
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute"
+    r"|ragged-all-to-all)(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))  # [G,N]<=[...] -> N ranks per group
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _traffic(kind: str, out_bytes: int, n: int) -> float:
+    """Per-chip link bytes for ring algorithms.
+
+    all-gather     : each chip receives (n-1)/n of the gathered output
+    all-reduce     : ring AR moves 2*(n-1)/n of the buffer through each chip
+    reduce-scatter : each chip receives its 1/n after (n-1)/n passes ~ out*(n-1)
+                     (out is the per-chip scattered result; input = out*n)
+    all-to-all     : (n-1)/n of the buffer leaves the chip
+    collective-permute : the whole buffer crosses one link
+    """
+    if kind == "collective-permute":
+        return float(out_bytes)      # whole buffer crosses one link
+    if n <= 1:
+        return 0.0
+    f = (n - 1) / n
+    if kind == "all-gather":
+        return out_bytes * f
+    if kind == "all-reduce":
+        return 2 * out_bytes * f
+    if kind == "reduce-scatter":
+        return out_bytes * (n - 1)
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        return out_bytes * f
+    return 0.0
+
+
+_COUNTED_OPS = {
+    # ops whose operand+output bytes are genuine HBM traffic on TPU
+    "dot", "convolution", "fusion", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "sort", "all-reduce", "all-gather",
+    "reduce-scatter", "all-to-all", "collective-permute", "ragged-all-to-all",
+    "all-gather-start", "all-reduce-start", "collective-permute-start",
+}
+
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_ANYOP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = (\([^)]*\)|\S+?\]\S*|\S+) ([\w\-]+)\(")
+
+
+def ideal_bytes(hlo_text: str) -> float:
+    """Fusion-ideal per-chip HBM traffic from the optimized HLO.
+
+    XLA:CPU leaves large elementwise/convert/copy chains unfused, so raw
+    ``cost_analysis()['bytes accessed']`` wildly over-reports what a TPU (which
+    fuses those chains) would move through HBM. This proxy assumes PERFECT
+    elementwise fusion: only ops that must touch HBM on TPU are charged —
+    matmuls/convolutions (operands + outputs), data-movement ops
+    (gather/scatter/dynamic-slice/update), sorts, collectives, and op-level
+    fusions (their internals are free, their operands/outputs are not).
+    Ops inside fused computations are skipped (their traffic is the fusion
+    op's operands/outputs). Elementwise, broadcast, reshape, convert, copy,
+    reduce, parameter, constant are treated as fused/free.
+    """
+    total = 0.0
+    in_fused = False
+    for line in hlo_text.splitlines():
+        cm = _COMP_RE.match(line.strip()) if "{" in line else None
+        if cm:
+            name = cm.group(1)
+            in_fused = name.startswith(("fused_", "region_", "wide."))
+            continue
+        if in_fused:
+            continue
+        m = _ANYOP_RE.match(line)
+        if not m:
+            continue
+        op = m.group(2)
+        if op not in _COUNTED_OPS:
+            continue
+        # output + all operand shapes on the line (operands printed inline)
+        total += sum(_shape_bytes(s) for s in _split_op_shapes(line))
+    return total
+
+
+def _split_op_shapes(line: str) -> List[str]:
+    """Output type + operand types of one HLO op line (drops attr noise)."""
+    head, _, rest = line.partition(" = ")
+    body = rest
+    # cut trailing attributes that may contain shapes (e.g. metadata)
+    for cut in (", sharding=", ", metadata=", ", backend_config=",
+                ", calls=", ", kind="):
+        idx = body.find(cut)
+        if idx >= 0:
+            body = body[:idx]
+    return [body]
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum collective output bytes + modeled link traffic per op kind.
+
+    ``-start`` ops counted once (their ``-done`` twin carries no new data).
+    """
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line.split("=")[0] if "=" in line else False:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        n = _group_size(line)
+        d = out.setdefault(kind, {"count": 0, "bytes": 0.0, "traffic": 0.0,
+                                  "max_group": 0})
+        d["count"] += 1
+        d["bytes"] += b
+        d["traffic"] += _traffic(kind, b, n)
+        d["max_group"] = max(d["max_group"], n)
+    return out
+
+
+def model_flops(cfg, shape: Dict[str, Any]) -> float:
+    """Useful model FLOPs for the cell: 6*N_active*tokens (train),
+    2*N_active*tokens (prefill), 2*N_active*new_tokens (decode)."""
+    n_active = cfg.active_param_count()
+    b, s = shape["global_batch"], shape["seq_len"]
+    if shape["kind"] == "train":
+        return 6.0 * n_active * b * s
+    if shape["kind"] == "prefill":
+        return 2.0 * n_active * b * s
+    return 2.0 * n_active * b  # decode: one new token per sequence
+
+
+def roofline_terms(cost: Dict[str, float], collectives: Dict[str, Dict],
+                   n_chips: int, cfg=None, shape=None) -> Dict[str, Any]:
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    # memory term: fusion-ideal traffic (see ideal_bytes); raw bytes-accessed
+    # kept as the unfused upper bound diagnostic
+    ideal = float(cost.get("ideal_bytes", bytes_acc))
+    traffic = sum(d["traffic"] for d in collectives.values())
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": ideal / HBM_BW,
+        "memory_s_unfused_bound": bytes_acc / HBM_BW,
+        "collective_s": traffic / ICI_BW,
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_acc,
+        "ideal_bytes_per_chip": ideal,
+        "collective_traffic_per_chip": traffic,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    terms["bottleneck"] = dom.replace("_s", "")
+    total = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["step_s_lower_bound"] = total
+    if cfg is not None and shape is not None:
+        mf = model_flops(cfg, shape)
+        terms["model_flops_global"] = mf
+        global_hlo = flops * n_chips
+        terms["useful_flop_ratio"] = mf / global_hlo if global_hlo else 0.0
+        # roofline fraction: useful model flops vs what the chips could do in
+        # the bound step time
+        if total > 0:
+            terms["roofline_fraction"] = mf / (n_chips * PEAK_FLOPS * total)
+    return terms

@@ -1,0 +1,134 @@
+"""Common model machinery: parameter definitions, norms, RoPE.
+
+Parameters are declared as trees of ``Leaf`` records carrying shape, dtype,
+init style and *logical* sharding axes. Three materializers walk the same tree:
+
+  * ``init_tree``     -> real jnp arrays (smoke tests / examples)
+  * ``abstract_tree`` -> jax.ShapeDtypeStruct stand-ins (dry-run; no allocation)
+  * ``pspec_tree``    -> jax.sharding.PartitionSpec per leaf (pjit in/out specs)
+
+Logical axes vocabulary (resolved by repro.distributed.sharding):
+  "fsdp"  — parameter sharding over the data(+pod) axes (ZeRO-3 style)
+  "tp"    — tensor parallel over the model axis
+  "exp"   — expert parallel over the model axis (MoE expert dim)
+  "stack" — scan-stacked layer-group dim (never sharded)
+  None    — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Leaf:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"      # normal | zeros | ones
+    scale: float = 1.0        # stddev multiplier for normal init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_leaf(x) -> bool:
+    return isinstance(x, Leaf)
+
+
+def init_tree(defs, key, dtype_override=None):
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=_is_leaf)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        dt = dtype_override or leaf.dtype
+        if leaf.init == "zeros":
+            arr = jnp.zeros(leaf.shape, dt)
+        elif leaf.init == "ones":
+            arr = jnp.ones(leaf.shape, dt)
+        else:
+            fan_in = leaf.shape[-2] if len(leaf.shape) >= 2 else leaf.shape[-1]
+            std = leaf.scale / math.sqrt(max(fan_in, 1))
+            arr = (jax.random.normal(k, leaf.shape, jnp.float32) * std).astype(dt)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_tree(defs, dtype_override=None):
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, dtype_override or l.dtype),
+        defs, is_leaf=_is_leaf)
+
+
+def pspec_tree(defs, rules: Dict[Optional[str], Any]):
+    from jax.sharding import PartitionSpec as P
+
+    def to_spec(l: Leaf):
+        return P(*[rules.get(a, None) for a in l.axes])
+
+    return jax.tree_util.tree_map(to_spec, defs, is_leaf=_is_leaf)
+
+
+def tree_bytes(defs) -> int:
+    leaves = jax.tree_util.tree_leaves(defs, is_leaf=_is_leaf)
+    total = 0
+    for l in leaves:
+        total += int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+    return total
+
+
+def tree_params(defs) -> int:
+    leaves = jax.tree_util.tree_leaves(defs, is_leaf=_is_leaf)
+    return sum(int(np.prod(l.shape)) for l in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Numeric helpers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """[head_dim/2] inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., seq, heads, head_dim]; positions broadcastable to [..., seq]."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                      # [half]
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [..., seq, half]
+    cos = jnp.cos(angles)[..., None, :]                          # [..., seq, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(dt)
+
+
+def pad_vocab(vocab: int, multiple: int = 512) -> int:
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def with_sharding(x, spec):
+    """Sharding constraint that is a no-op outside a mesh context."""
+    from jax.sharding import PartitionSpec
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec) \
+            if isinstance(spec, PartitionSpec) else x
+    except (ValueError, RuntimeError):
+        return x

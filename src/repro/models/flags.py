@@ -1,0 +1,19 @@
+"""Trace-time flags + the scan wrapper used by every model loop.
+
+``ANALYSIS_UNROLL`` exists because XLA's ``cost_analysis()`` counts a while
+loop body ONCE, not times its trip count. The dry-run therefore lowers small
+fully-unrolled model variants (1 and 2 layer-groups) and extrapolates the
+per-group cost linearly — see repro.launch.dryrun. Production lowering keeps
+rolled scans (compile time flat in depth; remat at group boundaries).
+"""
+from __future__ import annotations
+
+from jax import lax
+
+ANALYSIS_UNROLL = False
+
+
+def scan(body, init, xs, length=None):
+    import repro.models.flags as F
+    return lax.scan(body, init, xs, length=length,
+                    unroll=True if F.ANALYSIS_UNROLL else 1)

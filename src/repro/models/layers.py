@@ -1,0 +1,344 @@
+"""Transformer building blocks: GQA attention (full / decode), cross-attention,
+dense SwiGLU / GELU FFNs.
+
+All functions are pure; sharding is injected via ``ShardingCtx`` constraints so
+the same code runs unsharded in smoke tests and 512-way sharded in the dry-run.
+
+Memory notes (these drive the roofline):
+  * full attention is blockwise over q-chunks (online-softmax-free per chunk,
+    each chunk's score matrix is [B, H, qc, Sk] — never the full S^2 matrix);
+  * decode attention uses the grouped-GQA einsum (no repeat of the KV cache —
+    repeating a 32k-seq cache 8x would be a multi-TB materialization);
+  * KV caches are written with per-batch dynamic_update_slice so GSPMD keeps
+    the sequence axis sharded (verified in the dry-run HLO).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.models.common import Leaf, apply_rope, rms_norm
+from repro.models import flags
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg: ArchConfig, cross: bool = False) -> Dict[str, Leaf]:
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    d_ctx = D
+    if cross and cfg.cross_attn is not None and cfg.cross_attn.ctx_dim:
+        d_ctx = cfg.cross_attn.ctx_dim
+    dt = cfg.dtype
+    defs: Dict[str, Leaf] = {
+        "ln": Leaf((D,), (None,), dt, init="ones"),
+        "wq": Leaf((D, H * hd), ("fsdp", "tp"), dt),
+        "wk": Leaf((d_ctx, Hkv * hd), ("fsdp", "tp"), dt),
+        "wv": Leaf((d_ctx, Hkv * hd), ("fsdp", "tp"), dt),
+        "wo": Leaf((H * hd, D), ("tp", "fsdp"), dt),
+    }
+    if cfg.qkv_bias and not cross:
+        defs["bq"] = Leaf((H * hd,), ("tp",), dt, init="zeros")
+        defs["bk"] = Leaf((Hkv * hd,), ("tp",), dt, init="zeros")
+        defs["bv"] = Leaf((Hkv * hd,), ("tp",), dt, init="zeros")
+    if cfg.qk_norm and not cross:
+        defs["qn"] = Leaf((hd,), (None,), dt, init="ones")
+        defs["kn"] = Leaf((hd,), (None,), dt, init="ones")
+    return defs
+
+
+def ffn_defs(cfg: ArchConfig, gelu: bool = False) -> Dict[str, Leaf]:
+    D, F, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    defs = {
+        "ln": Leaf((D,), (None,), dt, init="ones"),
+        "w_up": Leaf((D, F), ("fsdp", "tp"), dt),
+        "w_down": Leaf((F, D), ("tp", "fsdp"), dt),
+    }
+    if not gelu:  # SwiGLU
+        defs["w_gate"] = Leaf((D, F), ("fsdp", "tp"), dt)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p, h, src, cfg: ArchConfig, cross: bool):
+    """Project to q [B,S,H,hd], k/v [B,Sk,Hkv,hd]; apply qk-norm + biases."""
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = h @ p["wq"]
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if cfg.qkv_bias and not cross:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(*h.shape[:-1], H, hd)
+    k = k.reshape(*src.shape[:-1], Hkv, hd)
+    v = v.reshape(*src.shape[:-1], Hkv, hd)
+    if cfg.qk_norm and not cross:
+        q = rms_norm(q, p["qn"], cfg.norm_eps)
+        k = rms_norm(k, p["kn"], cfg.norm_eps)
+    return q, k, v
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool, ctx: Optional[ShardingCtx] = None,
+                        q_chunk: int = 512) -> jax.Array:
+    """Chunked softmax attention. q [B,S,H,hd]; k/v [B,Sk,H,hd] (heads already
+    repeated). Scores are materialized only per q-chunk (f32).
+
+    Sharding constraints are applied INSIDE the scan body — without them the
+    GSPMD partitioner is free to replicate the batch dim of the per-chunk
+    score tensor, which blows per-chip HBM traffic up ~dp-fold (observed in
+    the dry-run before this constraint existed)."""
+    B, S, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = hd ** -0.5
+    qc = min(q_chunk, S)
+    while S % qc:
+        qc -= 1  # largest divisor <= q_chunk
+    nc = S // qc
+    qs = q.reshape(B, nc, qc, H, hd).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.arange(Sk)
+    cs = (lambda a, *ax: ctx.cs(a, *ax)) if ctx is not None else (lambda a, *ax: a)
+
+    def step(_, inp):
+        idx, qb = inp  # qb [B,qc,H,hd]
+        qb = cs(qb, "batch", None, "tp", None)
+        # dot in io dtype (MXU accumulates f32 internally); softmax math in
+        # f32. Using preferred_element_type=f32 here would make the backward
+        # cotangent chain flow in f32, doubling bwd HBM + collective traffic.
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qb, k).astype(jnp.float32) * scale
+        scores = cs(scores, "batch", "tp", None, None)
+        if causal:
+            qpos = idx * qc + jnp.arange(qc)
+            mask = qpos[:, None] >= kpos[None, :]
+            scores = jnp.where(mask[None, None], scores, -jnp.inf)
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        m = jnp.maximum(m, -1e30)  # fully-masked rows
+        p_ = jnp.exp(scores - m)
+        l = jnp.sum(p_, axis=-1, keepdims=True)
+        o = jnp.einsum("bhqk,bkhd->bqhd", (p_ / l).astype(v.dtype), v)
+        return None, cs(o, "batch", None, "tp", None)
+
+    # flash-attention backward semantics: recompute the per-chunk score matrix
+    # in the backward pass instead of stacking [nc,B,H,qc,Sk] probabilities in
+    # HBM across the scan (the stacked residuals are the full S^2 matrix)
+    _, outs = flags.scan(jax.checkpoint(step), None, (jnp.arange(nc), qs))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def kv_blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool, ctx: Optional[ShardingCtx] = None,
+                           kv_chunk: int = 512) -> jax.Array:
+    """Flash attention chunked over the KV axis (context-parallel form).
+
+    q [B,S,H,hd] stays (batch x seq)-sharded; k/v [B,Sk,Hkv,hd] are consumed
+    in chunks with online softmax, so every chip's query shard attends to the
+    full context without the score matrix ever exceeding [.., S_loc, kc].
+    Grouped-GQA einsum — K/V are never head-repeated. Used by the "fsdp_cp"
+    sharding mode where heads are NOT sharded (works for any head count,
+    e.g. llama4-scout's 40 heads that 16-way TP cannot divide).
+    """
+    B, S, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    scale = hd ** -0.5
+    kc = min(kv_chunk, Sk)
+    while Sk % kc:
+        kc -= 1
+    nk = Sk // kc
+    cs = (lambda a, *ax: ctx.cs(a, *ax)) if ctx is not None else (lambda a, *ax: a)
+    qg = q.reshape(B, S, Hkv, g, hd)
+    qpos = jnp.arange(S)
+
+    def step(carry, j):
+        m_prev, l_prev, acc = carry
+        kb = lax.dynamic_slice_in_dim(k, j * kc, kc, axis=1)
+        vb = lax.dynamic_slice_in_dim(v, j * kc, kc, axis=1)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb).astype(jnp.float32) * scale
+        s = cs(s, "batch", None, None, "sp", None)
+        if causal:
+            kpos = j * kc + jnp.arange(kc)
+            s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None, None],
+                          s, -jnp.inf)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        m_new = jnp.maximum(m_new, -1e30)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb)
+        acc = acc * alpha.astype(acc.dtype) + pv.astype(acc.dtype)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, g, S, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, S, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, S, hd), jnp.float32)
+    (m, l, acc), _ = flags.scan(jax.checkpoint(step), (m0, l0, a0),
+                                jnp.arange(nk))
+    out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+
+
+def attn_full(p, x, cfg: ArchConfig, ctx: ShardingCtx,
+              positions: jax.Array, kv_src: Optional[jax.Array] = None,
+              causal: bool = True, use_rope: bool = True,
+              want_cache: bool = False,
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full-sequence self/cross attention.
+
+    Returns (output [B,S,D], cache entries {k,v: [B,Sk,Hkv,hd]} if asked).
+    The cache re-sharding constraint (sequence over "model") is only applied
+    when a cache is requested — in training it would fight the head sharding
+    and trigger involuntary full rematerialization in GSPMD.
+    """
+    cross = kv_src is not None
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    if ctx.mode == "tp_sp_opt" and x.ndim == 3 and x.shape[1] > 1:
+        # Megatron-SP: gather the seq-sharded residual to full-seq exactly
+        # once, on the bf16 NORM OUTPUT. Without this explicit boundary the
+        # partitioner gathers the f32 norm internals once per consumer (3x
+        # the bytes, 2x the dtype width) — measured 14.5GB/layer vs the
+        # theoretical 2.4GB/layer of TP+SP (EXPERIMENTS.md §Perf it5).
+        h = ctx.cs(h, "batch", None, None)
+    src = kv_src if cross else h
+    q, k, v = _project_qkv(p, h, src, cfg, cross)
+    if use_rope and not cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    cache = None
+    if want_cache:
+        cache = {"k": ctx.cs(k, "batch", "kv_sp", None, None),
+                 "v": ctx.cs(v, "batch", "kv_sp", None, None)}
+    if ctx.mode == "fsdp_cp":
+        # context-parallel: q stays (batch x seq)-sharded, K/V gathered to
+        # full-seq per chip (GQA keeps them small), flash over KV chunks
+        q = ctx.cs(q, "batch", "sp", None, None)
+        k = ctx.cs(k, "batch", None, None, None)
+        v = ctx.cs(v, "batch", None, None, None)
+        o = kv_blockwise_attention(q, k, v, causal=causal and not cross,
+                                   ctx=ctx)
+    else:
+        # Megatron TP: repeat KV to H heads; shard over heads where divisible
+        if Hkv != H:
+            k = jnp.repeat(k, H // Hkv, axis=2)
+            v = jnp.repeat(v, H // Hkv, axis=2)
+        q = ctx.cs(q, "batch", None, "tp", None)
+        k = ctx.cs(k, "batch", None, "tp", None)
+        v = ctx.cs(v, "batch", None, "tp", None)
+        o = blockwise_attention(q, k, v, causal=causal and not cross, ctx=ctx)
+    o = o.reshape(*x.shape[:-1], H * cfg.head_dim_)
+    out = o @ p["wo"]
+    return ctx.cs(out, "batch", "sp", None), cache
+
+
+def update_kv_cache(cache_k, cache_v, k_new, v_new, positions):
+    """Write one token's K/V at per-sequence positions.
+    cache [B,Smax,Hkv,hd]; new [B,1,Hkv,hd]; positions [B]."""
+    def upd(c, n, pos):
+        # c [Smax,Hkv,hd]; n [1,Hkv,hd]; pos scalar
+        return lax.dynamic_update_slice(c, n, (pos, 0, 0))
+    ck = jax.vmap(upd)(cache_k, k_new, positions)
+    cv = jax.vmap(upd)(cache_v, v_new, positions)
+    return ck, cv
+
+
+def attn_decode(p, x, cache: Dict[str, jax.Array], cfg: ArchConfig,
+                ctx: ShardingCtx, positions: jax.Array,
+                cross: bool = False, use_rope: bool = True,
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode attention against a (sharded) KV cache.
+
+    x [B,1,D]; cache {k,v: [B,Smax,Hkv,hd]}; positions [B] = index of the new
+    token. Cross-attention reads a static cache (no write, no masking by pos).
+    Grouped-GQA einsum: the cache is never head-repeated.
+    """
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = H // Hkv
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    if ctx.mode == "fsdp_cp":
+        # weight-stationary decode projections (see ffn_apply)
+        h = ctx.cs(h, None, None, "fsdp")
+    if cross:
+        ck, cv = cache["k"], cache["v"]
+        q = (h @ p["wq"]).reshape(*h.shape[:-1], H, hd)
+        if ctx.mode == "fsdp_cp":
+            q = ctx.cs(q, "batch", None, None, None)  # back to batch-sharded
+        new_cache = cache
+    else:
+        q, k_new, v_new = _project_qkv(p, h, h, cfg, cross=False)
+        if ctx.mode == "fsdp_cp":
+            q = ctx.cs(q, "batch", None, None, None)
+            k_new = ctx.cs(k_new, "batch", None, None, None)
+            v_new = ctx.cs(v_new, "batch", None, None, None)
+        if use_rope:
+            q = apply_rope(q, positions[:, None], cfg.rope_theta)
+            k_new = apply_rope(k_new, positions[:, None], cfg.rope_theta)
+        ck, cv = update_kv_cache(cache["k"], cache["v"], k_new, v_new, positions)
+        ck = ctx.cs(ck, "batch", "kv_sp", None, None)
+        cv = ctx.cs(cv, "batch", "kv_sp", None, None)
+        new_cache = {"k": ck, "v": cv}
+    B, Smax = ck.shape[0], ck.shape[1]
+    qg = q.reshape(B, 1, Hkv, g, hd)
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", qg, ck,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if not cross:
+        valid = jnp.arange(Smax)[None, :] <= positions[:, None]  # [B,Smax]
+        scores = jnp.where(valid[:, None, None, None, :], scores, -jnp.inf)
+    m = jnp.maximum(jnp.max(scores, axis=-1, keepdims=True), -1e30)
+    pr = jnp.exp(scores - m)
+    l = jnp.sum(pr, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqs,bshd->bqhgd", (pr / l).astype(cv.dtype), cv)
+    o = o.reshape(B, 1, H * hd)
+    if ctx.mode == "fsdp_cp":
+        o = ctx.cs(o, None, None, "tp")   # weight-stationary o-projection
+        out = o @ p["wo"]
+        return ctx.cs(out, None, None, "fsdp"), new_cache
+    out = o @ p["wo"]
+    return ctx.cs(out, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def ffn_apply(p, x, cfg: ArchConfig, ctx: ShardingCtx, gelu: bool = False):
+    decode = x.ndim == 3 and x.shape[1] == 1
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    if ctx.mode == "tp_sp_opt" and x.ndim == 3 and not decode:
+        h = ctx.cs(h, "batch", None, None)   # single bf16 seq-gather
+    if ctx.mode == "fsdp_cp" and decode:
+        # WEIGHT-STATIONARY decode: activations are tiny [B,1,D]; re-shard
+        # them to match the 2D weight sharding (D over data, F over model)
+        # so every matmul contracts locally against the chip's own weight
+        # shard + a small activation psum — instead of all-gathering
+        # ~weights/tp bytes of parameters per layer per TOKEN.
+        h = ctx.cs(h, None, None, "fsdp")
+    up = h @ p["w_up"]
+    if gelu:
+        act = jax.nn.gelu(up)
+    else:
+        act = jax.nn.silu(h @ p["w_gate"]) * up
+    if ctx.mode == "fsdp_cp":
+        if decode:
+            act = ctx.cs(act, None, None, "tp")
+        else:
+            # tokens stay (batch x seq)-sharded; weights gathered per layer
+            act = ctx.cs(act, "batch", "sp", None)
+    else:
+        act = ctx.cs(act, "batch", None, "tp")
+    out = act @ p["w_down"]
+    if ctx.mode == "fsdp_cp" and decode:
+        # keep the decode residual D-sharded over data (weight-stationary
+        # end-to-end): re-sharding the [B,1,D] residual costs ~2MB/layer vs
+        # all-gathering w_down (~100MB f32/layer) to produce a full-D output
+        return ctx.cs(out, None, None, "fsdp")
+    return ctx.cs(out, "batch", "sp", None)

@@ -1,0 +1,183 @@
+"""Mamba2 (SSD — state-space duality) block: chunked full-sequence scan +
+single-token decode step.
+
+Full path follows the SSD chunked algorithm (arXiv:2405.21060 §6): the sequence
+is split into chunks of Q tokens; within a chunk the output is an attention-like
+masked matmul (quadratic in Q only), and chunk-to-chunk state is carried through
+a lax.scan (linear in sequence length) — this is what makes ``long_500k``
+in-contract for the ssm/hybrid archs.
+
+Sharding: heads over "tp", batch over "batch"; the recurrent state
+[B, H, dstate, headdim] is tiny and stays head-sharded.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.models.common import Leaf, rms_norm
+from repro.models import flags
+
+
+def ssm_defs(cfg: ArchConfig) -> Dict[str, Leaf]:
+    s = cfg.ssm
+    D, dt = cfg.d_model, cfg.dtype
+    di = s.d_inner(D)
+    H = s.n_heads(D)
+    GN = s.n_groups * s.d_state
+    return {
+        "ln": Leaf((D,), (None,), dt, init="ones"),
+        "wx": Leaf((D, di), ("fsdp", "tp"), dt),
+        "wz": Leaf((D, di), ("fsdp", "tp"), dt),
+        "wB": Leaf((D, GN), ("fsdp", None), dt),
+        "wC": Leaf((D, GN), ("fsdp", None), dt),
+        "wdt": Leaf((D, H), ("fsdp", "tp"), dt),
+        "conv": Leaf((s.conv_dim, di), (None, "tp"), dt, scale=0.5),
+        "A_log": Leaf((H,), ("tp",), jnp.float32, init="zeros"),
+        "dt_bias": Leaf((H,), ("tp",), jnp.float32, init="zeros"),
+        "D_skip": Leaf((H,), ("tp",), jnp.float32, init="ones"),
+        "gn": Leaf((di,), ("tp",), dt, init="ones"),
+        "wout": Leaf((di, D), ("tp", "fsdp"), dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. x [B,S,C]; w [width,C]."""
+    width = w.shape[0]
+    out = x * w[width - 1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[width - 1 - i]
+    return out
+
+
+def _ssd_chunk_scan(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD. xh [B,S,H,P]; dt [B,S,H] (post-softplus); A [H] (negative);
+    Bm/Cm [B,S,H,N] (already head-broadcast). Returns y [B,S,H,P] (f32 math).
+
+    Recurrence: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t . h_t
+    """
+    B, S, H, P_ = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    # slice per chunk INSIDE the scan body (closure capture, dynamic_slice)
+    # rather than stacking reshaped-f32 copies as scan xs — the stacked-xs
+    # form materializes a full-sequence f32 copy of x/B/C per layer, which
+    # was the dominant HBM peak for the ssm/hybrid train cells
+    dt32 = dt.astype(jnp.float32)
+
+    def _chunk(a, c):
+        return lax.dynamic_slice_in_dim(a, c * Q, Q, axis=1)
+
+    def step(state, c):
+        xc = _chunk(xh, c).astype(jnp.float32)   # [B,Q,H,P]
+        dc = _chunk(dt32, c)                     # [B,Q,H]
+        bc = _chunk(Bm, c).astype(jnp.float32)   # [B,Q,H,N]
+        cc = _chunk(Cm, c).astype(jnp.float32)
+        dA = dc * A                              # [B,Q,H]
+        dA_cs = jnp.cumsum(dA, axis=1)          # inclusive
+        xdt = xc * dc[..., None]
+        # intra-chunk (masked quadratic term)
+        scores = jnp.einsum("bqhn,bkhn->bqkh", cc, bc)
+        L = jnp.exp(dA_cs[:, :, None, :] - dA_cs[:, None, :, :])
+        iq = jnp.arange(Q)
+        L = jnp.where((iq[:, None] >= iq[None, :])[None, :, :, None], L, 0.0)
+        y = jnp.einsum("bqkh,bkhp->bqhp", scores * L, xdt)
+        # inter-chunk (contribution of carried state)
+        y = y + jnp.einsum("bqhn,bhnp->bqhp", cc * jnp.exp(dA_cs)[..., None], state)
+        # new carried state
+        decay_to_end = jnp.exp(dA_cs[:, -1:, :] - dA_cs)        # [B,Q,H]
+        new_state = (state * jnp.exp(dA_cs[:, -1])[..., None, None]
+                     + jnp.einsum("bkhn,bkhp->bhnp", bc * decay_to_end[..., None], xdt))
+        return new_state, y
+
+    state0 = jnp.zeros((B, H, N, P_), jnp.float32)
+    # checkpoint: recompute intra-chunk decay/score tensors in backward rather
+    # than stacking [nc,B,Q,Q,H] residuals across the chunk scan
+    final_state, ys = flags.scan(jax.checkpoint(step), state0,
+                                 jnp.arange(nc))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, P_)
+    return y.astype(xh.dtype), final_state
+
+
+def _pre(p, x, cfg: ArchConfig, ctx: ShardingCtx):
+    """Shared projections: returns (xz [B,S,di], z, Bm/Cm [B,S,H,N], dt [B,S,H])."""
+    s = cfg.ssm
+    H = s.n_heads(cfg.d_model)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    xz = h @ p["wx"]
+    z = h @ p["wz"]
+    Bm = (h @ p["wB"]).reshape(*h.shape[:-1], s.n_groups, s.d_state)
+    Cm = (h @ p["wC"]).reshape(*h.shape[:-1], s.n_groups, s.d_state)
+    if s.n_groups != H:
+        Bm = jnp.repeat(Bm, H // s.n_groups, axis=-2)
+        Cm = jnp.repeat(Cm, H // s.n_groups, axis=-2)
+    dt = jax.nn.softplus((h @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    return xz, z, Bm, Cm, dt
+
+
+def _post(p, y, z, x_shape, cfg: ArchConfig, ctx: ShardingCtx):
+    """Gated RMS norm + out projection. y [B,S,di]."""
+    y = rms_norm(y * jax.nn.silu(z), p["gn"], cfg.norm_eps)
+    out = y @ p["wout"]
+    return ctx.cs(out, "batch", "sp", None)
+
+
+def ssm_full(p, x, cfg: ArchConfig, ctx: ShardingCtx, want_cache: bool = False
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence Mamba2 block. Returns (out [B,S,D], cache {state, conv})."""
+    s = cfg.ssm
+    B, S, _ = x.shape
+    H, P_ = s.n_heads(cfg.d_model), s.head_dim
+    xz, z, Bm, Cm, dt = _pre(p, x, cfg, ctx)
+    xc = jax.nn.silu(_causal_conv(xz, p["conv"]))
+    xc = ctx.cs(xc, "batch", None, "tp")
+    xh = xc.reshape(B, S, H, P_)
+    A = -jnp.exp(p["A_log"])
+    y, final_state = _ssd_chunk_scan(xh, dt, A, Bm, Cm, s.chunk)
+    y = y + xh * p["D_skip"][None, None, :, None].astype(xh.dtype)
+    out = _post(p, y.reshape(B, S, -1), z, x.shape, cfg, ctx)
+    cache = None
+    if want_cache:
+        # decode cache: recurrent state + last (conv_dim-1) pre-conv inputs
+        conv_tail = xz[:, -(s.conv_dim - 1):, :]
+        cache = {"state": ctx.cs(final_state, "batch", "tp", None, None),
+                 "conv": ctx.cs(conv_tail, "batch", None, "tp")}
+    return out, cache
+
+
+def ssm_decode(p, x, cache: Dict[str, jax.Array], cfg: ArchConfig,
+               ctx: ShardingCtx) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token Mamba2 step. x [B,1,D]; cache {state [B,H,N,P], conv [B,w-1,di]}."""
+    s = cfg.ssm
+    B = x.shape[0]
+    H, P_ = s.n_heads(cfg.d_model), s.head_dim
+    xz, z, Bm, Cm, dt = _pre(p, x, cfg, ctx)          # xz [B,1,di]; dt [B,1,H]
+    # conv over the buffered window
+    win = jnp.concatenate([cache["conv"], xz], axis=1)     # [B,w,di]
+    xc = jax.nn.silu(jnp.sum(win * p["conv"][None], axis=1, keepdims=True))
+    xh = xc.reshape(B, H, P_).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dt1 = dt[:, 0]                                          # [B,H]
+    dA = jnp.exp(dt1 * A)                                   # [B,H]
+    b1 = Bm[:, 0].astype(jnp.float32)                       # [B,H,N]
+    c1 = Cm[:, 0].astype(jnp.float32)
+    xdt = xh * dt1[..., None]                               # [B,H,P]
+    new_state = (cache["state"] * dA[..., None, None]
+                 + jnp.einsum("bhn,bhp->bhnp", b1, xdt))
+    y = jnp.einsum("bhn,bhnp->bhp", c1, new_state)
+    y = y + xh * p["D_skip"][None, :, None]
+    y = y.astype(x.dtype).reshape(B, 1, -1)
+    out = _post(p, y, z, x.shape, cfg, ctx)
+    cache = {"state": ctx.cs(new_state, "batch", "tp", None, None),
+             "conv": ctx.cs(win[:, 1:], "batch", None, "tp")}
+    return out, cache

@@ -1,0 +1,22 @@
+"""Public model API: ``build_model(cfg_or_name, mesh=None)``.
+
+The returned ``Model`` exposes:
+  param_defs / init / abstract_params / param_pspecs
+  loss(params, tokens, labels, extras)      — training objective
+  prefill(params, tokens, extras)           — (last logits, prompt cache)
+  decode_step(params, cache, tokens, pos)   — (logits, new cache)
+  cache_specs(batch, seq)                   — decode-cache abstract tree
+"""
+from __future__ import annotations
+
+from typing import Union
+
+from repro.configs.base import ArchConfig, get_config
+from repro.models.transformer import Model
+
+
+def build_model(cfg: Union[str, ArchConfig], mesh=None,
+                mode: str = "tp_sp") -> Model:
+    if isinstance(cfg, str):
+        cfg = get_config(cfg)
+    return Model(cfg, mesh=mesh, mode=mode)

@@ -1,0 +1,169 @@
+"""Mixture-of-Experts FFN with sort-based token dispatch and expert parallelism.
+
+Two execution paths sharing one dispatch core:
+
+  * ``_moe_local``   — no mesh (smoke tests): plain capacity-bucketed dispatch.
+  * ``_moe_sharded`` — shard_map over the full mesh: tokens live on their
+    (data x model) shard, routing + capacity bucketing are LOCAL, experts are
+    sharded over the model axis (EP) and tokens move via two all_to_alls
+    (DeepSeek-style dispatch/combine). Expert weights are FSDP-sharded over the
+    data axes and all-gathered inside (ZeRO-3); shard_map transposes the gather
+    to a psum_scatter in backward automatically.
+
+Dispatch is scatter-free: pairs are argsorted by expert and both dispatch and
+combine are pure gathers (scatters shard poorly under GSPMD and we must keep
+the lowered HLO collective-clean for the roofline).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.distributed.sharding import ShardingCtx
+from repro.models.common import Leaf, rms_norm
+
+
+def moe_defs(cfg: ArchConfig) -> Dict[str, Leaf]:
+    m = cfg.moe
+    D, E, F, dt = cfg.d_model, m.n_experts, m.d_ff_expert, cfg.dtype
+    return {
+        "ln": Leaf((D,), (None,), dt, init="ones"),
+        "router": Leaf((D, E), ("fsdp", None), dt),
+        "w_gate": Leaf((E, D, F), ("exp", "fsdp", None), dt),
+        "w_up": Leaf((E, D, F), ("exp", "fsdp", None), dt),
+        "w_down": Leaf((E, F, D), ("exp", None, "fsdp"), dt),
+    }
+
+
+def _capacity(n_tokens: int, n_experts: int, top_k: int, cf: float,
+              dropless: bool = False) -> int:
+    if dropless:
+        # capacity that can never drop (all pairs routed to one expert);
+        # used for decode where n_tokens is tiny and drops corrupt outputs
+        return n_tokens * top_k
+    return max(1, math.ceil(n_tokens * top_k * cf / n_experts))
+
+
+def _route_and_bucket(xt, router, E: int, K: int, C: int):
+    """Local routing: top-k experts per token + capacity bucketing.
+
+    xt [T, D]. Returns (buf [E, C, D], combine info).
+    Scatter-free: double-argsort gives each (token, k) pair its rank within its
+    expert; dispatch and combine are gathers.
+    """
+    T = xt.shape[0]
+    logits = (xt @ router).astype(jnp.float32)            # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gvals, gidx = lax.top_k(probs, K)                     # [T, K]
+    eflat = gidx.reshape(-1)                              # [T*K]
+    order = jnp.argsort(eflat)                            # stable
+    se = eflat[order]
+    counts = jnp.sum(jax.nn.one_hot(eflat, E, dtype=jnp.int32), axis=0)  # [E]
+    start = jnp.cumsum(counts) - counts                   # exclusive prefix
+    rank_sorted = jnp.arange(T * K, dtype=jnp.int32) - start[se]
+    inv = jnp.argsort(order)
+    rank = rank_sorted[inv]                               # [T*K] rank within expert
+    keep = rank < C
+    # dispatch (gather): buf[e, c] = token of the pair at sorted slot start[e]+c
+    grid_c = jnp.arange(C, dtype=jnp.int32)
+    gslot = start[:, None] + grid_c[None, :]              # [E, C]
+    valid = grid_c[None, :] < jnp.minimum(counts, C)[:, None]
+    pair_tok_sorted = (order // K).astype(jnp.int32)      # token id per sorted pair
+    tok_idx = jnp.take(pair_tok_sorted, jnp.clip(gslot, 0, T * K - 1), axis=0)
+    buf = jnp.where(valid[..., None], jnp.take(xt, tok_idx, axis=0), 0)
+    info = (eflat, rank, keep, gvals.astype(xt.dtype))
+    return buf, info
+
+
+def _combine(out_buf, info, T: int, K: int, C: int):
+    """out_buf [E, C, D] -> y [T, D] (gather + gate-weighted sum over K)."""
+    eflat, rank, keep, gvals = info
+    flat = out_buf.reshape(-1, out_buf.shape[-1])         # [E*C, D]
+    slot = eflat * C + jnp.clip(rank, 0, C - 1)
+    vals = jnp.take(flat, slot, axis=0)                   # [T*K, D]
+    vals = jnp.where(keep[:, None], vals, 0)
+    vals = vals.reshape(T, K, -1) * gvals[..., None]
+    return jnp.sum(vals, axis=1)
+
+
+def _expert_ffn(buf, wg, wu, wd):
+    """buf [E?, C, D]; weights [E?, D, F] / [E?, F, D]."""
+    a = jnp.einsum("ecd,edf->ecf", buf, wg)
+    b = jnp.einsum("ecd,edf->ecf", buf, wu)
+    h = jax.nn.silu(a) * b
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def _moe_local(p, x, moe: MoEConfig):
+    B, S, D = x.shape
+    T = B * S
+    E, K = moe.n_experts, moe.top_k
+    C = _capacity(T, E, K, moe.capacity_factor, dropless=(S == 1))
+    xt = x.reshape(T, D)
+    buf, info = _route_and_bucket(xt, p["router"], E, K, C)
+    out_buf = _expert_ffn(buf, p["w_gate"], p["w_up"], p["w_down"])
+    return _combine(out_buf, info, T, K, C).reshape(B, S, D)
+
+
+def _moe_sharded(p, x, moe: MoEConfig, ctx: ShardingCtx):
+    """shard_map EP over the model axis; tokens local to (dp x tp) shards."""
+    mesh = ctx.mesh
+    dp_axes = ctx.batch_axes          # ("data",) or ("pod","data")
+    tp = "model"
+    dp_size = ctx.axis_size("batch")
+    tp_size = mesh.shape[tp]
+    B, S, D = x.shape
+    E, K = moe.n_experts, moe.top_k
+    # token sharding: batch over dp, seq over tp (where divisible)
+    seq_shardable = S % tp_size == 0
+    b_loc = B // dp_size if B % dp_size == 0 else B
+    s_loc = S // tp_size if seq_shardable else S
+    T_loc = b_loc * s_loc
+    C_loc = _capacity(T_loc, E, K, moe.capacity_factor, dropless=(S == 1))
+    E_loc = E // tp_size
+
+    x_spec = P(dp_axes if B % dp_size == 0 else None,
+               tp if seq_shardable else None, None)
+    specs_p = {
+        "ln": P(None),
+        "router": P(dp_axes, None),
+        "w_gate": P(tp, dp_axes, None),
+        "w_up": P(tp, dp_axes, None),
+        "w_down": P(tp, None, dp_axes),
+    }
+
+    def body(pb, xb):
+        # xb [b_loc, s_loc, D] local tokens
+        xt = xb.reshape(T_loc, D)
+        router = lax.all_gather(pb["router"], dp_axes, axis=0, tiled=True)
+        buf, info = _route_and_bucket(xt, router, E, K, C_loc)   # [E, C_loc, D]
+        # dispatch: regroup experts onto their model shard
+        buf = lax.all_to_all(buf, tp, split_axis=0, concat_axis=1, tiled=True)
+        wg = lax.all_gather(pb["w_gate"], dp_axes, axis=1, tiled=True)
+        wu = lax.all_gather(pb["w_up"], dp_axes, axis=1, tiled=True)
+        wd = lax.all_gather(pb["w_down"], dp_axes, axis=2, tiled=True)
+        out = _expert_ffn(buf, wg, wu, wd)                       # [E_loc, C_loc*tp, D]
+        out = lax.all_to_all(out, tp, split_axis=1, concat_axis=0, tiled=True)
+        y = _combine(out, info, T_loc, K, C_loc)
+        return y.reshape(b_loc, s_loc, D)
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(specs_p, x_spec),
+                       out_specs=x_spec, check_vma=False)
+    pb = {k: p[k] for k in specs_p}
+    return fn(pb, x)
+
+
+def moe_apply(p, x, cfg: ArchConfig, ctx: ShardingCtx):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    if ctx.enabled:
+        out = _moe_sharded(p, h, cfg.moe, ctx)
+    else:
+        out = _moe_local(p, h, cfg.moe)
+    return ctx.cs(out, "batch", "sp", None)

@@ -1,0 +1,161 @@
+"""Continuous-batching inference engine (the vLLM-role substrate).
+
+Iteration-level scheduling: each ``step()`` admits waiting requests into free
+slots (admission is prediction-guided through the Maestro accountant + rho
+margin — Eq. 3's R_need gates admission exactly as §III.C describes), runs
+prefill for newly admitted sequences, then one batched decode step for all
+active sequences. Preemption is boundary-only: requests are only evicted
+between engine steps, with their KV accounted and reclaimable.
+
+KV layout: per-slot contiguous cache (the model's decode cache) whose pages
+are accounted through the VirtualKVPool; the physical paged arena + Pallas
+paged_attention kernel live in repro.kernels (the accounting semantics —
+virtual budget >> physical, admission-checked growth — are identical).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.runtime.accounting import MemoryAccountant
+from repro.core.runtime.kv_pool import VirtualKVPool
+from repro.core.sched.margins import RhoEstimator
+from repro.models.transformer import Model
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    tokens: List[int]
+    max_new: int = 64
+    pred_len: Optional[float] = None      # L_hat from the dispatch gateway
+    extras: Optional[Dict[str, Any]] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    eos: Optional[int] = None
+
+
+class Engine:
+    def __init__(self, model: Model, params, accountant: MemoryAccountant,
+                 max_slots: int = 4, s_max: int = 256,
+                 page_tokens: int = 16):
+        self.model = model
+        self.params = params
+        self.acc = accountant
+        self.s_max = s_max
+        self.max_slots = max_slots
+        alpha = max(model.cfg.kv_bytes_per_token(), 1)
+        self.alpha = alpha
+        self.pool = VirtualKVPool(accountant, page_bytes=alpha * page_tokens,
+                                  page_tokens=page_tokens)
+        self.pool.set_virtual_budget(model.cfg.name,
+                                     alpha * s_max * max_slots * 4)
+        self.rho = RhoEstimator()
+        self.waiting: List[Request] = []
+        self.active: Dict[int, Request] = {}
+        self.slot_of: Dict[int, int] = {}
+        self.free_slots = list(range(max_slots))
+        self.positions = np.zeros(max_slots, np.int32)
+        structs, _ = model.cache_specs(max_slots, s_max)
+        self.cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  structs)
+        self.finished: List[Request] = []
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    # ------------------------------------------------------------- admission
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def _r_need(self, req: Request) -> float:
+        pred = req.pred_len if req.pred_len is not None else req.max_new
+        return self.rho.r_need(self.alpha * (len(req.tokens) + pred))
+
+    def _admit(self) -> List[Request]:
+        admitted = []
+        while self.waiting and self.free_slots:
+            req = self.waiting[0]
+            need = self._r_need(req)
+            if not self.pool.alloc_seq(req.req_id, self.model.cfg.name,
+                                       int(need / self.alpha)):
+                break   # memory-infeasible: reject-for-now (backpressure)
+            self.waiting.pop(0)
+            slot = self.free_slots.pop()
+            self.slot_of[req.req_id] = slot
+            self.active[req.req_id] = req
+            admitted.append(req)
+        return admitted
+
+    # -------------------------------------------------------------- prefill
+    def _prefill(self, req: Request) -> None:
+        slot = self.slot_of[req.req_id]
+        toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
+        logits, cache = self.model.prefill(self.params, toks,
+                                           req.extras or {})
+        P = len(req.tokens)
+
+        def write(dst, src):
+            # dst [G, max_slots, S_max, ...]; src [G, 1, P, ...]
+            if dst.shape[2] == src.shape[2]:      # static cross entries
+                return dst.at[:, slot].set(src[:, 0])
+            return dst.at[:, slot, :P].set(src[:, 0])
+
+        def write_state(dst, src):                 # ssm state/conv
+            return dst.at[:, slot].set(src[:, 0])
+
+        for name, entry in cache.items():
+            for kname, arr in entry.items():
+                tgt = self.cache[name][kname]
+                if kname in ("k", "v"):
+                    self.cache[name][kname] = write(tgt, arr)
+                else:
+                    self.cache[name][kname] = write_state(tgt, arr)
+        self.positions[slot] = P
+        req.out.append(int(jnp.argmax(logits[0])))
+
+    # --------------------------------------------------------------- decode
+    def step(self) -> List[Request]:
+        """One engine iteration; returns requests finished this step."""
+        for req in self._admit():
+            self._prefill(req)
+        if self.active:
+            toks = np.zeros((self.max_slots, 1), np.int32)
+            for rid, req in self.active.items():
+                toks[self.slot_of[rid], 0] = req.out[-1]
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(self.positions))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            done = []
+            for rid, req in list(self.active.items()):
+                slot = self.slot_of[rid]
+                tok = int(nxt[slot])
+                req.out.append(tok)
+                self.positions[slot] += 1
+                if (len(req.out) >= req.max_new
+                        or (req.eos is not None and tok == req.eos)
+                        or self.positions[slot] >= self.s_max - 1):
+                    done.append(rid)
+            for rid in done:
+                self._release(rid)
+        return [r for r in self.finished]
+
+    def _release(self, rid: int) -> None:
+        req = self.active.pop(rid)
+        slot = self.slot_of.pop(rid)
+        actual = self.alpha * (len(req.tokens) + len(req.out))
+        self.rho.observe(actual, max(self._r_need(req), 1.0))
+        self.pool.free_seq(rid)
+        self.pool.reclaim_unmapped()    # elastic shrink back to the pool
+        self.free_slots.append(slot)
+        self.positions[slot] = 0
+        self.finished.append(req)
+
+    def drain(self, max_steps: int = 10_000) -> List[Request]:
+        while (self.waiting or self.active) and max_steps:
+            self.step()
+            max_steps -= 1
+        out, self.finished = self.finished, []
+        return out

@@ -1,0 +1,127 @@
+"""Node-level multi-model runtime: real model colocation on one device.
+
+Holds a zoo of (small) models; weights move between DEVICE (jnp arrays) and
+HOST (numpy) following the hierarchical residency manager — a Sleeping model
+keeps its compiled executable cache (the CUDA-graph analogue: jax.jit cache
+keyed by shapes survives offload) while its weights live in host RAM.
+Exports the readiness / headroom signals (NodeSignal) the cross-cluster
+scheduler consumes.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.predictor.cost_model import HardwareSpec, ModelProfile
+from repro.core.runtime.accounting import MemoryAccountant
+from repro.core.runtime.residency import HierarchicalResidency, ModelState
+from repro.core.sched.fitness import NodeSignal
+from repro.models.transformer import Model
+from repro.serving.engine import Engine, Request
+
+
+def _tree_bytes(tree) -> int:
+    return sum(x.nbytes for x in jax.tree.leaves(tree))
+
+
+class NodeRuntime:
+    def __init__(self, node_id: int, cluster_id: int,
+                 zoo: Dict[str, Model], host_params: Dict[str, Any],
+                 hbm_budget: float = 2e9, max_slots: int = 4,
+                 s_max: int = 256, ctx_bytes: int = 8 << 20):
+        self.node_id = node_id
+        self.cluster_id = cluster_id
+        self.zoo = zoo
+        self.host_params = host_params      # numpy trees (host tier)
+        self.device_params: Dict[str, Any] = {}
+        self.engines: Dict[str, Engine] = {}
+        self.acc = MemoryAccountant(m_total=hbm_budget, m_other=16 << 20)
+        self.ctx_bytes = ctx_bytes
+        self.max_slots = max_slots
+        self.s_max = s_max
+        profiles = {
+            name: ModelProfile(
+                name=name, weight_bytes=_tree_bytes(host_params[name]),
+                ctx_bytes=ctx_bytes,
+                alpha_bytes_per_token=m.cfg.kv_bytes_per_token(),
+                state_bytes=m.cfg.ssm_state_bytes(),
+                prefill_flops_per_token=2.0 * m.cfg.active_param_count(),
+                decode_bytes_per_token=2.0 * m.cfg.active_param_count(),
+                hw=HardwareSpec())
+            for name, m in zoo.items()}
+        self.profiles = profiles
+        self.residency = HierarchicalResidency(
+            profiles, c_gpu=hbm_budget * 0.8, c_cpu=64e9, c_disk=1e12)
+        # host tier is where everything starts
+        for name in zoo:
+            self.residency.state[name] = ModelState.CPU
+            self.residency.lru["cpu"][name] = profiles[name].weight_bytes
+
+    # ------------------------------------------------------------ residency
+    def activate(self, name: str) -> float:
+        """Make `name` servable; returns measured activation seconds."""
+        t0 = time.perf_counter()
+        self.residency.pinned = {m for m, e in self.engines.items()
+                                 if e.active}
+        ok, _ = self.residency.ensure_gpu(name)
+        if not ok:
+            raise RuntimeError(f"cannot activate {name}")
+        # apply evictions the residency manager decided
+        for m, st in self.residency.state.items():
+            if st in (ModelState.SLEEPING, ModelState.CPU) \
+                    and m in self.device_params:
+                self._offload(m)
+        if name not in self.device_params:
+            self.device_params[name] = jax.tree.map(
+                jax.device_put, self.host_params[name])
+            self.acc.register_weights(
+                name, self.profiles[name].weight_bytes)
+            self.acc.register_context(name, self.ctx_bytes)
+        if name not in self.engines:
+            self.engines[name] = Engine(
+                self.zoo[name], self.device_params[name], self.acc,
+                max_slots=self.max_slots, s_max=self.s_max)
+        else:
+            self.engines[name].params = self.device_params[name]
+        return time.perf_counter() - t0
+
+    def _offload(self, name: str) -> None:
+        """Device -> host (weights only; jit executable cache survives —
+        that is what makes re-activation cheap for Sleeping models)."""
+        self.device_params.pop(name, None)
+        self.acc.unregister_weights(name)
+        if self.residency.state[name] is ModelState.CPU:
+            self.acc.unregister_context(name)
+
+    def sleep(self, name: str) -> None:
+        self.residency.sleep(name)
+        self._offload(name)
+
+    # -------------------------------------------------------------- serving
+    def submit(self, model: str, req: Request) -> None:
+        if model not in self.device_params:
+            self.activate(model)
+        self.engines[model].submit(req)
+
+    def step(self) -> Dict[str, list]:
+        out = {}
+        for name, eng in self.engines.items():
+            if name in self.device_params and (eng.waiting or eng.active):
+                eng.step()
+            if eng.finished:
+                out[name] = eng.finished[:]
+                eng.finished.clear()
+        return out
+
+    # -------------------------------------------------------------- signals
+    def signal(self) -> NodeSignal:
+        warm = {m: self.residency.activation_latency(m)
+                for m in self.residency.warm_set()}
+        qd = float(np.mean([len(e.waiting) for e in self.engines.values()])
+                   ) if self.engines else 0.0
+        return NodeSignal(node_id=self.node_id, cluster_id=self.cluster_id,
+                          headroom=self.acc.headroom, queue_delay_s=qd,
+                          warm_models=warm, total_hbm=self.acc.m_total)

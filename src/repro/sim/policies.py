@@ -1,0 +1,190 @@
+"""Scheduling policies for the trace-driven simulator (§IV.A baselines).
+
+All policies share the same node runtime (residency, accounting, profiles),
+dynamic arrivals and SLOs — they differ ONLY in admission, routing and queue
+ordering, mirroring the paper's controlled comparison:
+
+  fcfs          — global FIFO, least-loaded feasible node
+  edf           — deadline-first for batch, class-priority for interactive
+  oracle-srtf   — shortest TRUE remaining time (perfect knowledge upper bound)
+  maestro       — predicted remaining time (Eq. 7-8) + fitness routing
+                  (Eq. 5, Alg. 3) + rho-margin admission + boundary preemption
+  maestro-np    — maestro without boundary preemption (Table II)
+Routing-only variants for Table VIII: baseline-lb, binpack (gamma=0),
+maestro-aff (gamma=0.25).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, TYPE_CHECKING
+
+import numpy as np
+
+from repro.core.control_loop import MaestroController
+from repro.core.predictor.length_model import MaestroPred
+from repro.core.sched.fitness import StageRequest
+from repro.core.sched.srtf import state_key
+from repro.data.tracegen import StageRecord
+
+if TYPE_CHECKING:
+    from repro.sim.simulator import Simulator
+
+
+class Policy:
+    name = "base"
+    requeue_at_boundary = True     # boundary preemption semantics
+
+    def bind(self, sim: "Simulator") -> None:
+        self.sim = sim
+
+    def priority(self, s: StageRecord, now: float) -> float:
+        raise NotImplementedError
+
+    def reservation(self, s: StageRecord) -> float:
+        """KV bytes reserved at admission."""
+        prof = self.sim.profiles[s.model]
+        return prof.r_kv(s.obs.prompt_len, self.sim.cfg.reserve_len)
+
+    def route(self, s: StageRecord, r_need: float) -> Optional[int]:
+        """Least-loaded feasible node (baseline routing)."""
+        best, load = None, float("inf")
+        for n in self.sim.nodes:
+            if n.can_admit(r_need, s.model):
+                l = len(n.running)
+                if l < load:
+                    best, load = n.node_id, l
+        return best
+
+    def on_finish(self, s: StageRecord, actual_kv: float,
+                  job_remaining_s: float) -> None:
+        pass
+
+
+class FCFS(Policy):
+    name = "fcfs"
+    requeue_at_boundary = False
+
+    def priority(self, s, now):
+        return float(s.stage_id)
+
+
+class EDF(Policy):
+    name = "edf"
+    requeue_at_boundary = False
+
+    def priority(self, s, now):
+        job = self.sim.jobs[s.job_id]
+        if job.interactive:
+            return -1e9 + job.arrival_s     # class priority for interactive
+        return job.arrival_s + job.deadline_s
+
+
+class OracleSRTF(Policy):
+    name = "oracle-srtf"
+
+    def priority(self, s, now):
+        job = self.sim.jobs[s.job_id]
+        rem = 0.0
+        for st in job.stages:
+            if st.stage_id in self.sim.done:
+                continue
+            prof = self.sim.profiles[st.model]
+            rem += prof.t_exec(st.obs.prompt_len, st.true_len)
+        return rem - (1e9 if job.interactive else 0.0)
+
+
+class Maestro(Policy):
+    name = "maestro"
+
+    def __init__(self, predictor: MaestroPred, gamma: float = 0.25,
+                 preempt: bool = True):
+        self.predictor = predictor
+        self.gamma = gamma
+        self.requeue_at_boundary = preempt
+        self._cache: Dict[int, Dict[str, float]] = {}
+
+    def bind(self, sim):
+        super().bind(sim)
+        self.ctl = MaestroController(self.predictor, sim.profiles,
+                                     sim.rtt, gamma=self.gamma)
+        # batch-precompute per-stage predictions (same inputs the dispatch
+        # gateway would see at stage creation; batching is just speed)
+        stages = list(sim.stage_by_id.values())
+        out = self.predictor.predict(list(s.obs for s in stages))
+        for s, L, pt in zip(stages, out["length"], out["p_tool"]):
+            prof = sim.profiles[s.model]
+            self._cache[s.stage_id] = {
+                "length": float(L), "p_tool": float(pt),
+                "t_exec": prof.t_exec(s.obs.prompt_len, float(L)),
+                "r_kv": prof.r_kv(s.obs.prompt_len, float(L))}
+
+    def _pred(self, s: StageRecord) -> Dict[str, float]:
+        return self._cache[s.stage_id]
+
+    def priority(self, s, now):
+        p = self._pred(s)
+        key = state_key(s.obs.app, s.obs.role, s.obs.invocation_idx,
+                        p["p_tool"])
+        t_rem = p["t_exec"] + self.ctl.wf_profiles.future_median(key)
+        # aging prevents starvation of long batch jobs
+        wait = max(0.0, now - self.sim.ready_at.get(s.stage_id, now))
+        t_rem -= self.ctl.queue.aging * wait
+        return t_rem - (1e9 if self.sim.jobs[s.job_id].interactive else 0.0)
+
+    def reservation(self, s):
+        p = self._pred(s)
+        return self.ctl.rho.r_need(p["r_kv"])
+
+    def route(self, s, r_need):
+        req = StageRequest(
+            stage_id=s.stage_id, model=s.model, r_need=r_need,
+            interactive=self.sim.jobs[s.job_id].interactive,
+            src_cluster=s.obs.src_cluster, t_exec=self._pred(s)["t_exec"])
+        # feasibility filter FIRST (Alg. 3 line 3), then rank by S(N,T);
+        # C_deg enters the ranking via the activation path's implicit
+        # evictions (residency LRU = degradation levels 1-2)
+        nodes = [n.signal() for n in self.sim.nodes
+                 if n.can_admit(r_need, s.model)]
+        if not nodes:
+            return None
+        sel = self.ctl.router.select(
+            req, nodes,
+            t_act_of=lambda sig, m: self.sim.nodes[sig.node_id].t_act(m),
+            c_deg_of=lambda sig, rq: self.sim.nodes[sig.node_id]
+                .degradation_cost(rq.r_need))
+        if sel is None:
+            return None
+        return sel[0].node_id
+
+    def on_finish(self, s, actual_kv, job_remaining_s):
+        p = self._pred(s)
+        self.ctl.rho.observe(actual_kv, max(p["r_kv"], 1.0))
+        key = state_key(s.obs.app, s.obs.role, s.obs.invocation_idx,
+                        p["p_tool"])
+        self.ctl.wf_profiles.record(key, job_remaining_s)
+
+
+class MaestroNoPreempt(Maestro):
+    name = "maestro-np"
+
+    def __init__(self, predictor, gamma: float = 0.25):
+        super().__init__(predictor, gamma=gamma, preempt=False)
+
+
+class BaselineLB(Maestro):
+    """Table VIII 'Baseline': load balancing, no prediction-guided packing."""
+    name = "baseline-lb"
+
+    def route(self, s, r_need):
+        return Policy.route(self, s, r_need)
+
+    def reservation(self, s):
+        return Policy.reservation(self, s)
+
+
+class BinPackOnly(Maestro):
+    """Table VIII 'BinPack Only': KV-aware packing, network-blind (gamma=0)."""
+    name = "binpack"
+
+    def __init__(self, predictor):
+        super().__init__(predictor, gamma=0.0)

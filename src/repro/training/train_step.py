@@ -1,0 +1,136 @@
+"""Train/serve step builders: value_and_grad + microbatch accumulation +
+AdamW, and the inference steps (prefill / decode) — all as pure functions
+ready for ``jax.jit`` with explicit in/out shardings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES, input_specs
+from repro.models.transformer import Model
+from repro.training.optimizer import (OptConfig, abstract_opt_state,
+                                      adamw_update, opt_pspecs)
+
+
+def _split_batch(batch: Dict[str, jax.Array]):
+    toks = batch["tokens"]
+    labels = batch.get("labels")
+    extras = {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+    return toks, labels, extras
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        toks, labels, extras = _split_batch(batch)
+        return model.loss(params, toks, labels, extras)
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig, n_micro: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # microbatch accumulation: scan over [n_micro, mb, ...] slices
+            def reshape(x):
+                b = x.shape[0]
+                assert b % n_micro == 0, (b, n_micro)
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+            mbatch = jax.tree.map(reshape, batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                tot_l, tot_g = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                tot_g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                     tot_g, g)
+                return (tot_l + l, tot_g), None
+
+            (loss, grads), _ = lax.scan(acc, (jnp.zeros(()), zero), mbatch)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+        params, opt_state, metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        toks, _, extras = _split_batch(batch)
+        return model.prefill(params, toks, extras)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens, positions):
+        return model.decode_step(params, cache, tokens, positions)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract in/out for AOT lowering (dry-run)
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(model: Model, shape_name: str):
+    """PartitionSpec per batch input: batch dim over dp, rest replicated."""
+    ctx = model.ctx
+    specs = {}
+    for k, s in input_specs(model.cfg, shape_name).items():
+        axes = ("batch",) + (None,) * (len(s.shape) - 1)
+        specs[k] = ctx.spec(*axes, dims=s.shape)
+    return specs
+
+
+def lower_cell(model: Model, shape_name: str, opt_cfg: Optional[OptConfig] = None,
+               n_micro: int = 1):
+    """AOT-lower the step for one (arch, shape) cell on the model's mesh.
+
+    Returns the jax ``Lowered`` object (call .compile() on it).
+    """
+    cfg = model.cfg
+    mesh = model.ctx.mesh
+    kind = SHAPES[shape_name]["kind"]
+    named = lambda spec_tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+    p_abs = model.abstract_params()
+    p_sh = named(model.param_pspecs())
+    b_abs = input_specs(cfg, shape_name)
+    b_sh = named(batch_pspecs(model, shape_name))
+
+    if kind == "train":
+        opt_cfg = opt_cfg or OptConfig()
+        step = make_train_step(model, opt_cfg, n_micro)
+        o_abs = abstract_opt_state(p_abs, opt_cfg.compression)
+        o_sh = named(opt_pspecs(model.param_pspecs(), opt_cfg.compression))
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     donate_argnums=(0, 1))
+        return fn.lower(p_abs, o_abs, b_abs)
+    if kind == "prefill":
+        step = make_prefill_step(model)
+        fn = jax.jit(step, in_shardings=(p_sh, b_sh))
+        return fn.lower(p_abs, b_abs)
+    # decode: one new token against a KV cache of length seq_len
+    sh = SHAPES[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    structs, cspecs = model.cache_specs(B, S)
+    c_sh = named(cspecs)
+    step = make_decode_step(model)
+    tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_sh = named(model.ctx.spec("batch", None, dims=(B, 1)))
+    pos_sh = named(model.ctx.spec("batch", dims=(B,)))
+    fn = jax.jit(step, in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+                 donate_argnums=(1,))
+    return fn.lower(p_abs, structs, tok_abs, pos_abs)

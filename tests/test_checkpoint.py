@@ -1,0 +1,63 @@
+"""Checkpoint: atomic roundtrip, async save, pruning, elastic restore."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import latest_step, prune, restore, save
+
+
+@pytest.fixture
+def tree():
+    k = jax.random.PRNGKey(0)
+    return {"w": jax.random.normal(k, (8, 16)),
+            "nested": {"b": jnp.arange(5, dtype=jnp.float32),
+                       "step": jnp.zeros((), jnp.int32)}}
+
+
+def test_roundtrip(tmp_path, tree):
+    save(str(tmp_path), tree, step=3, extra={"loss": 0.5})
+    out, extra = restore(str(tmp_path), tree)
+    assert extra == {"loss": 0.5}
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_prune(tmp_path, tree):
+    for s in (1, 2, 3, 4, 5):
+        save(str(tmp_path), tree, step=s)
+    assert latest_step(str(tmp_path)) == 5
+    prune(str(tmp_path), keep=2)
+    assert latest_step(str(tmp_path)) == 5
+    out, _ = restore(str(tmp_path), tree, step=4)
+    assert out is not None
+    with pytest.raises(Exception):
+        restore(str(tmp_path), tree, step=1)   # pruned
+
+
+def test_async_save(tmp_path, tree):
+    t = save(str(tmp_path), tree, step=9, async_=True)
+    assert isinstance(t, threading.Thread)
+    t.join(timeout=30)
+    out, _ = restore(str(tmp_path), tree)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_no_partial_checkpoint_visible(tmp_path, tree):
+    """tmp dirs never count as checkpoints (atomic publish)."""
+    save(str(tmp_path), tree, step=1)
+    (tmp_path / ".tmp_step_00000002").mkdir()
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_elastic_restore_dtype_cast(tmp_path, tree):
+    """Restore casts to the target tree's dtypes (e.g. bf16 params from an
+    f32 checkpoint after a precision change)."""
+    save(str(tmp_path), tree, step=1)
+    like = jax.tree.map(lambda x: x.astype(jnp.bfloat16)
+                        if x.dtype == jnp.float32 else x, tree)
+    out, _ = restore(str(tmp_path), like)
+    assert out["w"].dtype == jnp.bfloat16

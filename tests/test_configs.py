@@ -1,0 +1,92 @@
+"""Config system: registry completeness, analytic param model vs real trees,
+shape-suite applicability."""
+import jax
+import pytest
+
+from repro.configs import SHAPES, get_config, input_specs, list_configs
+from repro.models import build_model
+from repro.models.common import pad_vocab, tree_params
+
+ALL_ARCHS = [
+    "qwen3-32b", "starcoder2-15b", "qwen3-8b", "qwen1.5-110b",
+    "whisper-medium", "llama-3.2-vision-11b", "mamba2-2.7b",
+    "moonshot-v1-16b-a3b", "llama4-scout-17b-a16e", "jamba-v0.1-52b",
+]
+
+
+def test_all_archs_registered():
+    assert sorted(list_configs()) == sorted(ALL_ARCHS)
+    assert len(ALL_ARCHS) == 10
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_param_count_matches_tree(name):
+    """Analytic param_count == the real parameter tree (mod vocab padding)."""
+    cfg = get_config(name)
+    model = build_model(cfg)
+    tree_n = tree_params(model.param_defs())
+    pad = pad_vocab(cfg.vocab, 256) - cfg.vocab
+    n_embed_mats = 1 if cfg.tie_embeddings else 2
+    expected = cfg.param_count() + pad * cfg.d_model * n_embed_mats
+    assert tree_n == expected, (name, tree_n, expected)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_headline_param_count(name):
+    """Sanity: total params within expected range of the marketing size."""
+    cfg = get_config(name)
+    n = cfg.param_count() / 1e9
+    lo, hi = {
+        "qwen3-32b": (28, 36), "starcoder2-15b": (13, 18),
+        "qwen3-8b": (7, 9.5), "qwen1.5-110b": (95, 120),
+        "whisper-medium": (0.25, 1.2), "llama-3.2-vision-11b": (9, 13),
+        "mamba2-2.7b": (2.2, 3.2), "moonshot-v1-16b-a3b": (25, 31),
+        "llama4-scout-17b-a16e": (95, 112), "jamba-v0.1-52b": (45, 60),
+    }[name]
+    assert lo <= n <= hi, (name, n)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_moe_active_params(name):
+    cfg = get_config(name)
+    if cfg.moe is None:
+        assert cfg.active_param_count() == cfg.param_count()
+    else:
+        assert cfg.active_param_count() < cfg.param_count()
+
+
+def test_shape_suite_skips():
+    for name in ALL_ARCHS:
+        cfg = get_config(name)
+        if cfg.family in ("ssm", "hybrid"):
+            assert "long_500k" in cfg.applicable_shapes()
+        else:
+            assert "long_500k" in cfg.skipped_shapes()
+        assert "train_4k" in cfg.applicable_shapes()
+
+
+def test_input_specs_no_allocation():
+    for name in ALL_ARCHS:
+        cfg = get_config(name)
+        for shape in cfg.applicable_shapes():
+            specs = input_specs(cfg, shape)
+            for v in specs.values():
+                assert isinstance(v, jax.ShapeDtypeStruct)
+            sh = SHAPES[shape]
+            assert specs["tokens"].shape[0] == sh["global_batch"]
+
+
+def test_kv_bytes_per_token():
+    assert get_config("mamba2-2.7b").kv_bytes_per_token() == 0
+    assert get_config("mamba2-2.7b").ssm_state_bytes() > 0
+    jamba = get_config("jamba-v0.1-52b")
+    # 4 attention layers of 32
+    assert jamba.n_attn_layers == 4
+    assert jamba.kv_bytes_per_token() == 4 * 2 * 8 * 128 * 2
+
+
+def test_reduced_configs_are_small():
+    for name in ALL_ARCHS:
+        r = get_config(name).reduced()
+        assert r.param_count() < 50e6, name
+        assert r.layer_pattern_period == get_config(name).layer_pattern_period

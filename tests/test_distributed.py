@@ -1,0 +1,124 @@
+"""Sharding rules, roofline HLO parsing, gradient compression, fault
+tolerance components."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.fault import ElasticController, StragglerDetector
+from repro.distributed.sharding import ShardingCtx, mesh_rules
+from repro.launch.roofline import (_shape_bytes, ideal_bytes,
+                                   parse_collectives, roofline_terms)
+from repro.training.optimizer import OptConfig, adamw_init, compress_grads
+
+
+def test_mesh_rules_single_and_multi():
+    r1 = mesh_rules(None)
+    assert r1 == {}
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+    r = mesh_rules(FakeMesh())
+    assert r["fsdp"] == "data" and r["tp"] == "model"
+
+    class FakeMesh3:
+        axis_names = ("pod", "data", "model")
+    r3 = mesh_rules(FakeMesh3())
+    assert r3["fsdp"] == ("pod", "data")
+    assert r3["batch"] == ("pod", "data")
+
+
+def test_sharding_ctx_noop_without_mesh():
+    ctx = ShardingCtx(None)
+    x = jnp.ones((4, 4))
+    assert ctx.cs(x, "batch", None) is x
+    assert ctx.axis_size("tp") == 1
+
+
+def test_shape_bytes_parse():
+    assert _shape_bytes("bf16[16,256,4096]{2,1,0}") == 16 * 256 * 4096 * 2
+    assert _shape_bytes("(f32[8,8]{1,0}, s32[4]{0})") == 8 * 8 * 4 + 4 * 4
+    assert _shape_bytes("pred[]") == 1 or _shape_bytes("pred[]") == 0
+
+
+def test_parse_collectives_synthetic_hlo():
+    hlo = """
+ENTRY %main (p0: f32[16]) -> f32[16] {
+  %ag = f32[256,128]{1,0} all-gather(f32[16,128]{1,0} %x), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar.1 = bf16[1024]{0} all-reduce(bf16[1024]{0} %y), replica_groups=[8,16]<=[128], to_apply=%add
+  %cp = f32[64]{0} collective-permute(f32[64]{0} %z), source_target_pairs={{0,1}}
+}
+"""
+    out = parse_collectives(hlo)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 256 * 128 * 4
+    assert out["all-gather"]["max_group"] == 4
+    assert out["all-reduce"]["max_group"] == 16
+    assert out["all-reduce"]["traffic"] == pytest.approx(
+        2 * 1024 * 2 * 15 / 16)
+    assert out["collective-permute"]["traffic"] == 64 * 4
+
+
+def test_ideal_bytes_skips_fused_and_elementwise():
+    hlo = """
+%fused_computation.1 (param_0: f32[1024]) -> f32[1024] {
+  %big = f32[999999]{0} multiply(f32[999999]{0} %a, f32[999999]{0} %b)
+}
+ENTRY %main (p0: f32[16]) -> f32[16] {
+  %d = f32[128,128]{1,0} dot(f32[128,64]{1,0} %x, f32[64,128]{1,0} %w), lhs_contracting_dims={1}
+  %e = f32[4096]{0} add(f32[4096]{0} %u, f32[4096]{0} %v)
+}
+"""
+    b = ideal_bytes(hlo)
+    expected = (128 * 128 + 128 * 64 + 64 * 128) * 4
+    assert b == expected    # add + fused internals are free
+
+
+def test_roofline_terms_bottleneck():
+    cost = {"flops": 197e12, "bytes accessed": 819e9 * 3,
+            "ideal_bytes": 819e9 * 2}
+    colls = {"all-reduce": {"traffic": 50e9 * 0.5, "bytes": 1, "count": 1,
+                            "max_group": 16}}
+    t = roofline_terms(cost, colls, n_chips=256)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(2.0)
+    assert t["collective_s"] == pytest.approx(0.5)
+    assert t["bottleneck"] == "memory"
+
+
+@pytest.mark.parametrize("mode", ["bf16", "int8"])
+def test_gradient_compression_error_feedback(mode):
+    cfg = OptConfig(compression=mode)
+    params = {"w": jnp.zeros((64,))}
+    state = adamw_init(params, compression=mode)
+    g = {"w": jnp.linspace(-1, 1, 64) * 1e-3}
+    total = jnp.zeros((64,))
+    comp_total = jnp.zeros((64,))
+    for _ in range(50):
+        cg, state = compress_grads(g, state, cfg)
+        total = total + g["w"]
+        comp_total = comp_total + cg["w"]
+    # error feedback keeps the long-run average unbiased
+    np.testing.assert_allclose(np.asarray(comp_total), np.asarray(total),
+                               rtol=0.05, atol=1e-4)
+
+
+def test_straggler_detector_flags_outlier():
+    sd = StragglerDetector(z_thresh=2.0)
+    for step in range(30):
+        for n in range(8):
+            sd.observe(n, 1.0 + (5.0 if n == 3 else 0.0)
+                       + 0.01 * np.sin(step + n))
+    assert sd.stragglers() == [3]
+    assert sd.is_straggler(3, 6.0)
+    assert not sd.is_straggler(0, 1.0)
+
+
+def test_elastic_controller_plans():
+    ec = ElasticController(model_axis=16)
+    plan = ec.plan(512, failed=[1, 2, 3], ckpt_step=7)
+    assert plan.mesh_shape[1] == 16
+    assert plan.mesh_shape[0] * 16 <= 512 - 3
+    assert plan.restore_step == 7
+    assert ec.plan(16, failed=list(range(15)), ckpt_step=None) is None

@@ -1,0 +1,115 @@
+"""Pallas kernel validation: shape/dtype sweeps in interpret mode against the
+pure-jnp ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ssd_chunk import ssd_chunk
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,Hkv,hd", [
+    (1, 128, 128, 4, 4, 64),     # MHA
+    (2, 256, 256, 8, 2, 64),     # GQA 4x
+    (1, 128, 256, 8, 1, 128),    # MQA, cross-length
+    (2, 64, 64, 2, 2, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Sq, Sk, H, Hkv, hd, causal, dtype):
+    if causal and Sq != Sk:
+        pytest.skip("causal requires square for this sweep")
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, bq=64, bk=64,
+                          interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,H,Hkv,hd,page,slots", [
+    (2, 8, 2, 64, 16, 8),
+    (3, 4, 4, 32, 8, 4),
+    (1, 16, 2, 128, 32, 4),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(B, H, Hkv, hd, page, slots, dtype):
+    n_pages = B * slots + 3
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    kp = jax.random.normal(ks[1], (n_pages, page, Hkv, hd), dtype)
+    vp = jax.random.normal(ks[2], (n_pages, page, Hkv, hd), dtype)
+    bt = jax.random.permutation(ks[3], n_pages)[:B * slots] \
+        .reshape(B, slots).astype(jnp.int32)
+    max_len = page * slots
+    seq_lens = jax.random.randint(ks[4], (B,), 1, max_len + 1)
+    out = paged_attention(q, kp, vp, bt, seq_lens, page_size=page,
+                          interpret=True)
+    exp = ref.paged_attention_ref(q, kp, vp, bt, seq_lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 128, 4, 32, 16, 32),
+    (1, 64, 2, 16, 8, 16),
+    (2, 96, 8, 64, 32, 32),     # non-pow2 seq / chunk interplay
+])
+def test_ssd_chunk_sweep(B, S, H, P, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, H, N), jnp.float32)
+    Cm = jax.random.normal(ks[4], (B, S, H, N), jnp.float32)
+    out = ssd_chunk(x, dt, A, Bm, Cm, chunk=chunk, block_heads=2,
+                    interpret=True)
+    exp = ref.ssd_chunk_ref(x, dt, A, Bm, Cm)
+    scale = float(np.max(np.abs(np.asarray(exp)))) + 1e-9
+    err = np.max(np.abs(np.asarray(out) - np.asarray(exp))) / scale
+    assert err < 5e-4, err
+
+
+def test_ssd_chunk_equals_model_scan():
+    """The Pallas kernel and the model's jnp chunked scan agree."""
+    from repro.models.mamba2 import _ssd_chunk_scan
+    ks = jax.random.split(KEY, 5)
+    B, S, H, P, N = 2, 128, 4, 32, 16
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, H, N), jnp.float32)
+    Cm = jax.random.normal(ks[4], (B, S, H, N), jnp.float32)
+    out = ssd_chunk(x, dt, A, Bm, Cm, chunk=32, block_heads=4, interpret=True)
+    exp, _ = _ssd_chunk_scan(x, dt, A, Bm, Cm, chunk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ops_dispatch_ref_on_cpu():
+    from repro.kernels import ops
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32))
+    k = jax.random.normal(ks[1], (1, 64, 2, 32))
+    v = jax.random.normal(ks[2], (1, 64, 2, 32))
+    a = ops.flash_attention(q, k, v)             # auto -> ref on CPU
+    ops.set_mode("interpret")
+    try:
+        b = ops.flash_attention(q, k, v, bq=32, bk=32)
+    finally:
+        ops.set_mode(None)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,127 @@
+"""Scheduler components: rho margin adaptation, robust normalization bounds,
+SRTF ordering/aging/preemption hysteresis, fitness routing feasibility."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.sched.fitness import (FitnessRouter, NodeSignal,
+                                      RobustNormalizer, StageRequest)
+from repro.core.sched.margins import RhoEstimator
+from repro.core.sched.srtf import QueuedStage, SRTFQueue, WorkflowProfileStore
+
+
+def test_rho_tracks_underestimation_quantile():
+    rho = RhoEstimator(quantile=0.9, ewma=1.0)
+    rng = np.random.default_rng(0)
+    for _ in range(600):
+        pred = 100.0
+        actual = pred * rng.uniform(0.8, 1.25)   # up to 25% under
+        rho.observe(actual, pred)
+    assert 0.1 <= rho.rho <= 0.3     # "in practice it falls in [0.1, 0.3]"
+    assert rho.r_need(100.0) == pytest.approx(100 * (1 + rho.rho))
+
+
+def test_rho_never_negative_or_huge():
+    rho = RhoEstimator()
+    for _ in range(50):
+        rho.observe(50.0, 100.0)     # consistent OVERestimation
+    assert rho.rho >= rho.lo
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(-1e6, 1e6), min_size=1, max_size=200),
+       st.floats(-1e7, 1e7))
+def test_robust_normalizer_bounds(history, query):
+    n = RobustNormalizer()
+    for v in history:
+        n.observe("m", v)
+    out = n.norm("m", query)
+    assert 0.0 <= out <= 1.0
+
+
+def test_srtf_orders_by_remaining_time():
+    q = SRTFQueue()
+    a = QueuedStage(1, 1, interactive=False, t_exec=5.0, t_future=20.0)
+    b = QueuedStage(2, 2, interactive=False, t_exec=1.0, t_future=2.0)
+    c = QueuedStage(3, 3, interactive=True, t_exec=50.0, t_future=50.0)
+    for s in (a, b, c):
+        q.push(s, now=0.0)
+    # interactive strictly first, then shortest remaining
+    assert q.pop(0.0) is c
+    assert q.pop(0.0) is b
+    assert q.pop(0.0) is a
+
+
+def test_srtf_aging_promotes_waiters():
+    q = SRTFQueue(aging_factor=1.0)
+    old = QueuedStage(1, 1, interactive=False, t_exec=100.0, t_future=0.0,
+                      enqueue_time=0.0)
+    q.push(old, now=0.0)
+    new = QueuedStage(2, 2, interactive=False, t_exec=10.0, t_future=0.0,
+                      enqueue_time=200.0)
+    q.push(new, now=200.0)
+    q.refresh(200.0)   # old has aged 200s -> priority -100 beats 10
+    assert q.pop(200.0) is old
+
+
+def test_preemption_hysteresis_and_cooldown():
+    q = SRTFQueue(preempt_gain_s=1.0, cooldown_s=100.0)
+    run = QueuedStage(1, 1, interactive=False, t_exec=5.0, t_future=0.0)
+    cand = QueuedStage(2, 2, interactive=True, t_exec=0.5, t_future=0.0)
+    # below-threshold gain: no preemption
+    assert not q.should_preempt(run, cand, running_remaining_s=0.5, now=0.0)
+    # sufficient gain: preempt once...
+    assert q.should_preempt(run, cand, running_remaining_s=50.0, now=1.0)
+    # ...but cooldown blocks an immediate second preemption of the same job
+    assert not q.should_preempt(run, cand, running_remaining_s=50.0, now=2.0)
+    # and interactive work is never preempted for batch
+    i_run = QueuedStage(3, 3, interactive=True, t_exec=5.0, t_future=0.0)
+    b_cand = QueuedStage(4, 4, interactive=False, t_exec=0.1, t_future=0.0)
+    assert not q.should_preempt(i_run, b_cand, 1e9, now=500.0)
+
+
+def test_workflow_profile_median_and_backoff():
+    store = WorkflowProfileStore(default_future=7.0)
+    key = (1, 2, 3, 1)
+    assert store.future_median(key) == 7.0          # cold default
+    for v in (1.0, 9.0, 5.0):
+        store.record(key, v)
+    assert store.future_median(key) == 5.0
+    # intent-bucket backoff
+    store2 = WorkflowProfileStore(default_future=7.0)
+    store2.record((1, 2, 3, 0), 4.0)
+    assert store2.future_median((1, 2, 3, 2)) == 4.0
+
+
+def _sig(node_id, cluster, headroom, qd=0.0, warm=()):
+    return NodeSignal(node_id=node_id, cluster_id=cluster, headroom=headroom,
+                      queue_delay_s=qd, warm_models=dict.fromkeys(warm, 0.0))
+
+
+def test_fitness_filters_infeasible_and_prefers_warm():
+    rtt = np.zeros((2, 2))
+    router = FitnessRouter(rtt)
+    req = StageRequest(stage_id=1, model="m", r_need=10e9,
+                       interactive=False, src_cluster=0, t_exec=1.0)
+    nodes = [_sig(0, 0, headroom=5e9),            # infeasible
+             _sig(1, 0, headroom=12e9, warm=("m",)),
+             _sig(2, 1, headroom=30e9)]
+    t_act = lambda sig, m: 0.0 if m in sig.warm_models else 20.0
+    c_deg = lambda sig, rq: None                   # no degradation plans
+    sel = router.select(req, nodes, t_act, c_deg)
+    assert sel is not None
+    assert sel[0].node_id == 1    # warm + best-fit headroom wins
+
+
+def test_fitness_interactive_prefers_near_cluster():
+    rtt = np.array([[0.001, 0.2], [0.2, 0.001]])
+    router = FitnessRouter(rtt, gamma=0.25)
+    # seed the normalizer with both RTT scales
+    for v in (0.001, 0.2):
+        router.normalizer.observe("rtt", v)
+    req = StageRequest(stage_id=1, model="m", r_need=1e9,
+                       interactive=True, src_cluster=0, t_exec=1.0)
+    nodes = [_sig(0, 0, headroom=2e9), _sig(1, 1, headroom=2e9)]
+    sel = router.select(req, nodes, lambda s, m: 0.0, lambda s, r: 0.0)
+    assert sel[0].node_id == 0

@@ -1,0 +1,106 @@
+"""Trace generation + discrete-event simulator integration."""
+import numpy as np
+import pytest
+
+from repro.core.predictor import MaestroPred, PredictorConfig
+from repro.core.predictor.gbdt import GBDTConfig
+from repro.data.apps import APPS
+from repro.data.tracegen import (flatten_stages, generate_trace,
+                                 stratified_temporal_split)
+from repro.sim.policies import (EDF, FCFS, BaselineLB, Maestro,
+                                MaestroNoPreempt, OracleSRTF)
+from repro.sim.simulator import SimConfig, Simulator
+
+
+def test_trace_structure():
+    jobs = generate_trace(120, rate=1.0, seed=0)
+    assert len(jobs) == 120
+    stages = flatten_stages(jobs)
+    sids = [s.stage_id for s in stages]
+    assert len(sids) == len(set(sids))
+    for j in jobs:
+        ids = {s.stage_id for s in j.stages}
+        for s in j.stages:
+            for d in s.deps:
+                assert d in ids and d < s.stage_id   # DAG, topological ids
+    # arrivals increase
+    arr = [j.arrival_s for j in jobs]
+    assert all(a <= b for a, b in zip(arr, arr[1:]))
+
+
+def test_trace_batch_ratio_knob():
+    lo = generate_trace(400, batch_ratio=0.2, seed=1)
+    hi = generate_trace(400, batch_ratio=0.8, seed=1)
+    frac_lo = np.mean([not j.interactive for j in lo])
+    frac_hi = np.mean([not j.interactive for j in hi])
+    assert frac_lo < 0.35 and frac_hi > 0.65
+
+
+def test_tool_stages_are_short():
+    stages = flatten_stages(generate_trace(300, seed=2))
+    tool = [s.true_len for s in stages if s.tool_call]
+    free = [s.true_len for s in stages if not s.tool_call]
+    assert np.median(tool) < np.median(free) / 2   # Observation-1 bimodality
+
+
+def test_stratified_split_is_temporal():
+    jobs = generate_trace(200, seed=3)
+    train, test = stratified_temporal_split(jobs)
+    assert len(train) + len(test) == len(flatten_stages(jobs))
+    # within each stratum, every test record is newer than every train record
+    import collections
+    tr_g, te_g = collections.defaultdict(list), collections.defaultdict(list)
+    for s in train:
+        tr_g[(s.obs.role, s.tool_call, s.obs.cot)].append(s.stage_id)
+    for s in test:
+        te_g[(s.obs.role, s.tool_call, s.obs.cot)].append(s.stage_id)
+    for g, te in te_g.items():
+        if g in tr_g:
+            assert min(te) > max(tr_g[g])
+
+
+@pytest.fixture(scope="module")
+def predictor():
+    jobs = generate_trace(250, rate=1.0, seed=4)
+    train, _ = stratified_temporal_split(jobs)
+    cfg = PredictorConfig(
+        cls=GBDTConfig(objective="logloss", n_trees=25, max_leaves=7),
+        reg=GBDTConfig(n_trees=30, max_leaves=15))
+    return MaestroPred(cfg).fit(
+        [s.obs for s in train],
+        np.array([s.true_len for s in train], float),
+        np.array([float(s.tool_call) for s in train]))
+
+
+@pytest.mark.parametrize("policy_cls", [FCFS, EDF, OracleSRTF])
+def test_sim_completes_all_jobs(policy_cls):
+    jobs = generate_trace(150, rate=1.0, seed=5)
+    r = Simulator(jobs, policy_cls(), SimConfig()).run()
+    assert r.finished_jobs == 150
+    assert 0.0 <= r.slo_attainment <= 1.0
+
+
+def test_sim_maestro_completes_and_accounts(predictor):
+    jobs = generate_trace(150, rate=1.5, seed=6)
+    sim = Simulator(jobs, Maestro(predictor), SimConfig())
+    r = sim.run()
+    assert r.finished_jobs == 150
+    for n in sim.nodes:
+        assert n.acc.check_invariant()
+        assert not n.running            # all released
+
+
+def test_sim_maestro_beats_fcfs_under_contention(predictor):
+    cfg = SimConfig(nodes_per_cluster=(2, 1, 1))
+    jobs_fn = lambda: generate_trace(250, rate=2.5, seed=7, batch_ratio=0.6)
+    r_f = Simulator(jobs_fn(), FCFS(), cfg).run()
+    r_m = Simulator(jobs_fn(), Maestro(predictor), cfg).run()
+    assert r_m.slo_attainment > r_f.slo_attainment
+    assert (r_m.interactive_queue_delay_s
+            < r_f.interactive_queue_delay_s + 1e-9)
+
+
+def test_app_mix_covers_table1():
+    assert len(APPS) == 9
+    assert sum(a.interactive for a in APPS) == 4   # 4 interactive, 5 batch
+    assert abs(sum(a.weight for a in APPS) - 1.0) < 1e-6
