@@ -14,9 +14,11 @@ BENCHES = {}
 
 
 def _register():
-    from benchmarks import (activation, colocation, fitness, kernels, memory,
-                            prediction, preemption, scheduling)
+    from benchmarks import (activation, colocation, fitness, gateway, kernels,
+                            memory, prediction, preemption, scheduling)
     BENCHES.update({
+        "gateway": lambda fast: gateway.main(
+            n_jobs=20 if fast else 24, fast=fast),
         "table3_6_7_prediction": lambda fast: prediction.main(
             n_jobs=800 if fast else 2500),
         "fig7_scheduling": lambda fast: scheduling.main(
@@ -44,7 +46,15 @@ def main() -> None:
     for name in names:
         t0 = time.time()
         try:
-            BENCHES[name](args.fast)
+            payload = BENCHES[name](args.fast)
+            if payload is not None:
+                # machine-readable perf record (e.g. BENCH_gateway.json) so
+                # the trajectory is trackable across PRs
+                from benchmarks.common import save_result
+                try:
+                    save_result(f"BENCH_{name}", payload)
+                except TypeError as e:   # non-JSON payload: keep bench green
+                    print(f"[run] {name}: payload not serializable ({e})")
             print(f"[run] {name} OK ({time.time()-t0:.0f}s)")
         except Exception as e:
             failures.append((name, e))

@@ -1,103 +1,76 @@
-"""End-to-end driver: serve a multi-agent workflow through the full Maestro
-pipeline — agent-context observation -> cost prediction -> fitness routing ->
-node runtimes with real colocated (tiny) models -> post-execution calibration.
+"""Serve a multi-agent workload LIVE through the cluster gateway.
 
-Two nodes with different HBM budgets colocate three models; a Travel-
-Assistant-style workflow of dependent stages is scheduled through
-MaestroController and executed for real on CPU.
+Thin driver over ``repro.serving.gateway``: train the agent-aware cost
+predictor on a recorded trace, build a real-engine fleet across simulated-RTT
+clusters, convert a generated workflow trace into live jobs, and serve them
+end-to-end through the full Maestro hierarchy (SRTF queue -> fitness routing
+-> rho-margin admission -> node engines -> calibration feedback).
 
   PYTHONPATH=src python examples/serve_multi_agent.py
 """
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_config
-from repro.core.control_loop import MaestroController
-from repro.core.predictor import (MaestroPred, PredictorConfig,
-                                  StageObservation)
+from repro.core.predictor import MaestroPred, PredictorConfig
 from repro.core.predictor.gbdt import GBDTConfig
-from repro.core.predictor.cost_model import HardwareSpec, ModelProfile
 from repro.data.tracegen import generate_trace, stratified_temporal_split
-from repro.models import build_model
-from repro.serving.engine import Request
-from repro.serving.node_runtime import NodeRuntime
-
-RTT = np.array([[0.001, 0.05], [0.05, 0.001]])
+from repro.serving.cluster import (ClusterSpec, build_fleet, jobs_from_trace)
+from repro.serving.gateway import ClusterGateway
 
 
-def main():
-    # 1) train the cost predictor on a recorded trace (dispatch gateway)
-    print("[serve] training the agent-aware cost predictor ...")
-    jobs = generate_trace(300, seed=9)
+def train_predictor(train_jobs: int = 300, seed: int = 9) -> MaestroPred:
+    jobs = generate_trace(train_jobs, seed=seed)
     train, _ = stratified_temporal_split(jobs)
-    pred = MaestroPred(PredictorConfig(
+    cfg = PredictorConfig(
         cls=GBDTConfig(objective="logloss", n_trees=30, max_leaves=7),
-        reg=GBDTConfig(n_trees=40, max_leaves=15))).fit(
+        reg=GBDTConfig(n_trees=40, max_leaves=15))
+    return MaestroPred(cfg).fit(
         [s.obs for s in train],
         np.array([s.true_len for s in train], float),
         np.array([float(s.tool_call) for s in train]))
 
-    # 2) two nodes colocating tiny real models
-    zoo, host = {}, {}
-    for name in ("qwen3-8b", "starcoder2-15b", "mamba2-2.7b"):
-        cfg = get_config(name).reduced()
-        m = build_model(cfg)
-        zoo[name] = m
-        host[name] = jax.tree.map(np.asarray,
-                                  m.init(jax.random.PRNGKey(1)))
-    nodes = [NodeRuntime(0, 0, zoo, host, hbm_budget=1.2e9, s_max=64),
-             NodeRuntime(1, 1, zoo, host, hbm_budget=0.6e9, s_max=64)]
 
-    profiles = {n.profiles[k].name: n.profiles[k]
-                for n in nodes[:1] for k in n.profiles}
-    ctl = MaestroController(pred, profiles, RTT)
+def main(n_jobs: int = 6, train_jobs: int = 300, policy: str = "maestro",
+         seed: int = 7):
+    print(f"[serve] training the agent-aware cost predictor "
+          f"({train_jobs} recorded jobs) ...")
+    pred = train_predictor(train_jobs)
 
-    # 3) a dependent multi-agent workflow (planner -> tool -> writer -> chat)
-    workflow = [
-        ("qwen3-8b", "planner", 0, False),
-        ("mamba2-2.7b", "tool_agent", 3, False),
-        ("starcoder2-15b", "writer", 0, True),
-        ("qwen3-8b", "chat", 0, False),
-    ]
-    rng = np.random.default_rng(0)
+    spec = ClusterSpec()     # 3 real nodes over 2 clusters, 3-model zoo
+    print(f"[serve] building {len(spec.nodes)} NodeRuntimes over "
+          f"{spec.n_clusters} clusters, zoo={list(spec.model_names)} ...")
+    fleet = build_fleet(spec)
+
+    trace = generate_trace(n_jobs, rate=1.5, seed=seed)
+    jobs = jobs_from_trace(trace, n_clusters=spec.rtt_s.shape[0], seed=seed)
+    n_stages = sum(len(j.stages) for j in jobs)
+    print(f"[serve] serving {len(jobs)} jobs / {n_stages} stages "
+          f"under the '{policy}' policy ...")
+
     t0 = time.time()
-    for i, (model_name, role, tools, cot) in enumerate(workflow):
-        names = sorted(profiles)
-        obs = StageObservation(
-            app=7, role=i, position=i / 3, invocation_idx=i,
-            tools_available=tools, cot=cot, prompt_len=64,
-            model_id=names.index(model_name),
-            text="detailed travel booking plan please " * 8)
-        plan = ctl.plan(stage_id=i, job_id=0, obs=obs, interactive=True,
-                        nodes=[n.signal() for n in nodes],
-                        t_act_of=lambda sig, m: nodes[sig.node_id]
-                        .residency.activation_latency(m),
-                        c_deg_of=lambda sig, rq: 0.0)
-        node = nodes[plan.node_id if plan.node_id is not None else 0]
-        print(f"[serve] stage {i} ({role}/{model_name}): "
-              f"L_hat={plan.l_hat:.0f} p_tool={plan.p_tool:.2f} "
-              f"R_need={plan.r_need/1e3:.1f}KB -> node {node.node_id} "
-              f"(score={plan.score:.3f})")
-        node.submit(model_name, Request(
-            req_id=i, tokens=list(rng.integers(0, 256, 12)), max_new=8,
-            pred_len=plan.l_hat))
-        out = []
-        while not out:
-            res = node.step()
-            out = res.get(model_name, [])
-        actual = len(out[0].out)
-        ctl.observe_completion(obs, plan, actual_len=actual,
-                               actual_kv=plan.r_kv_hat * 0.9,
-                               job_remaining_after_s=1.0 * (3 - i))
-        print(f"         generated {actual} tokens: {out[0].out}")
-    print(f"[serve] workflow complete in {time.time()-t0:.1f}s wall; "
-          f"rho={ctl.rho.rho:.3f}")
-    for n in nodes:
-        warm = list(n.signal().warm_models)
-        print(f"[serve] node {n.node_id}: warm={warm} "
-              f"headroom={n.acc.headroom/1e6:.0f}MB")
+    gw = ClusterGateway(fleet, spec.rtt_s, predictor=pred, policy=policy)
+    m = gw.run(jobs)
+    print(f"[serve] done in {time.time() - t0:.1f}s wall "
+          f"({gw.tick} ticks = {gw.now:.1f}s virtual)")
+    print(f"[serve]   finished jobs        : {m.finished_jobs}/{len(jobs)}"
+          f" (dropped {m.dropped_jobs})")
+    print(f"[serve]   SLO attainment       : {m.slo_attainment:.2f}")
+    print(f"[serve]   mean / p95 latency   : {m.mean_latency_s:.2f}s / "
+          f"{m.p95_latency_s:.2f}s")
+    print(f"[serve]   interactive q-delay  : "
+          f"{m.interactive_queue_delay_s:.2f}s")
+    print(f"[serve]   cold starts / preempt: {m.cold_starts} / "
+          f"{m.preemptions}")
+    print(f"[serve]   generated tokens     : {m.generated_tokens}")
+    if gw.ctl is not None:
+        print(f"[serve]   calibrated rho       : {gw.ctl.rho.rho:.3f}")
+    for nid, node in gw.fleet.items():
+        sig = node.signal()
+        print(f"[serve] node {nid} (cluster {node.cluster_id}): "
+              f"warm={sorted(sig.warm_models)} "
+              f"headroom={sig.headroom / 1e6:.0f}MB")
+    return m
 
 
 if __name__ == "__main__":

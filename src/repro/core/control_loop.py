@@ -44,19 +44,22 @@ class MaestroController:
                  profiles: Dict[str, ModelProfile],
                  rtt_s: np.ndarray,
                  weights: Optional[FitnessWeights] = None,
-                 gamma: float = 0.25):
+                 gamma: float = 0.25,
+                 queue: Optional[SRTFQueue] = None):
         self.predictor = predictor
         self.profiles = profiles
         self.router = FitnessRouter(rtt_s, weights, gamma=gamma)
         self.rho = RhoEstimator()
-        self.queue = SRTFQueue()
+        # callers operating at a different time scale (e.g. the live gateway's
+        # tick clock) pass a queue with matching hysteresis thresholds
+        self.queue = queue if queue is not None else SRTFQueue()
         self.wf_profiles = WorkflowProfileStore()
 
     # ------------------------------------------------------------ phase 1+2
     def predict_stage(self, obs: StageObservation) -> Tuple[float, float, float]:
         """Returns (L_hat, p_tool, R_kv_hat)."""
         pred = self.predictor.predict_one(obs)
-        prof = self.profiles[_model_name(obs, self.profiles)]
+        prof = self.profiles[model_name(obs, self.profiles)]
         r_kv = prof.r_kv(obs.prompt_len, pred["length"])
         return pred["length"], pred["p_tool"], r_kv
 
@@ -65,7 +68,7 @@ class MaestroController:
              interactive: bool, nodes: List[NodeSignal],
              t_act_of, c_deg_of, now: float = 0.0) -> StagePlan:
         l_hat, p_tool, r_kv_hat = self.predict_stage(obs)
-        prof = self.profiles[_model_name(obs, self.profiles)]
+        prof = self.profiles[model_name(obs, self.profiles)]
         t_exec = prof.t_exec(obs.prompt_len, l_hat)
         r_need = self.rho.r_need(r_kv_hat)
         req = StageRequest(stage_id=stage_id,
@@ -100,6 +103,12 @@ class MaestroController:
         self.wf_profiles.record(key, job_remaining_after_s)
 
 
-def _model_name(obs: StageObservation, profiles: Dict[str, ModelProfile]) -> str:
+def model_name(obs: StageObservation, profiles: Dict[str, ModelProfile]) -> str:
+    """Deterministic model assignment shared by every plane that consumes the
+    controller: observation model ids map onto the sorted profile names, so
+    predictions, routing and live execution all agree on the serving model."""
     names = sorted(profiles)
     return names[obs.model_id % len(names)]
+
+
+_model_name = model_name  # backwards-compatible alias

@@ -1,0 +1,140 @@
+"""Live cluster topology: fleets of real ``NodeRuntime`` engines spread
+across simulated-RTT clusters, plus the trace -> live-workload adapter.
+
+This is the prototype-experiment substrate of the paper (§IV "prototype"):
+every node holds the same (tiny, structurally faithful) model zoo and real
+JAX engines; cross-cluster effects (RTT, cold starts) enter through the
+gateway's deterministic virtual clock rather than wall-clock sleeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.predictor.features import StageObservation
+from repro.data.tracegen import JobRecord
+from repro.models import build_model
+from repro.serving.node_runtime import NodeRuntime
+
+# default live zoo: three distinct families colocated per node (attention,
+# code-tuned attention, SSM) — the Table-IV colocation regime in miniature
+DEFAULT_ZOO = ("qwen3-8b", "starcoder2-15b", "mamba2-2.7b")
+
+# two same-region clusters + one remote (Fig. 4's RTT regime, seconds)
+DEFAULT_RTT = np.array([[0.0005, 0.003, 0.060],
+                        [0.003, 0.0005, 0.080],
+                        [0.060, 0.080, 0.0005]])
+
+
+@dataclasses.dataclass
+class NodeSpec:
+    cluster_id: int
+    hbm_budget: float = 1.2e9
+    max_slots: int = 4
+    s_max: int = 64
+
+
+@dataclasses.dataclass
+class ClusterSpec:
+    """Fleet description consumed by ``build_fleet``."""
+    nodes: Tuple[NodeSpec, ...] = (NodeSpec(0), NodeSpec(0, hbm_budget=0.8e9),
+                                   NodeSpec(1))
+    rtt_s: np.ndarray = dataclasses.field(
+        default_factory=lambda: DEFAULT_RTT.copy())
+    model_names: Tuple[str, ...] = DEFAULT_ZOO
+
+    @property
+    def n_clusters(self) -> int:
+        return int(max(n.cluster_id for n in self.nodes)) + 1
+
+
+def build_zoo(model_names: Sequence[str] = DEFAULT_ZOO, seed: int = 1
+              ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Tiny real models (reduced configs) + host-tier numpy parameter trees.
+    The host trees are shared by every node of the fleet (a model registry),
+    exactly as weights would be fetched from common storage."""
+    zoo, host = {}, {}
+    for i, name in enumerate(model_names):
+        cfg = get_config(name).reduced()
+        m = build_model(cfg)
+        zoo[name] = m
+        host[name] = jax.tree.map(np.asarray,
+                                  m.init(jax.random.PRNGKey(seed + i)))
+    return zoo, host
+
+
+def build_fleet(spec: Optional[ClusterSpec] = None,
+                zoo: Optional[Dict[str, Any]] = None,
+                host: Optional[Dict[str, Any]] = None,
+                seed: int = 1) -> List[NodeRuntime]:
+    """Instantiate the fleet; node ids are positional."""
+    spec = spec or ClusterSpec()
+    if zoo is None or host is None:
+        zoo, host = build_zoo(spec.model_names, seed=seed)
+    fleet = []
+    for nid, ns in enumerate(spec.nodes):
+        fleet.append(NodeRuntime(nid, ns.cluster_id, zoo, host,
+                                 hbm_budget=ns.hbm_budget,
+                                 max_slots=ns.max_slots, s_max=ns.s_max))
+    return fleet
+
+
+# ---------------------------------------------------------------------------
+# Trace adapter: simulator JobRecords -> live jobs with real token prompts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LiveStage:
+    stage_id: int
+    job_id: int
+    deps: List[int]
+    obs: StageObservation
+    interactive: bool
+    tokens: List[int]             # real prompt token ids
+    max_new: int                  # decode budget (ground-truth len, capped)
+    nominal_len: int = 0          # uncapped trace-scale output length; the
+                                  # calibration target for L_hat (0 => max_new)
+
+
+@dataclasses.dataclass
+class LiveJob:
+    job_id: int
+    app: str
+    interactive: bool
+    arrival_s: float
+    stages: List[LiveStage]
+    deadline_s: float = 0.0       # filled by the gateway's SLO profiler
+
+
+def jobs_from_trace(trace_jobs: Sequence[JobRecord], vocab: int = 512,
+                    prompt_cap: int = 16, gen_cap: int = 16,
+                    n_clusters: int = 3, seed: int = 0) -> List[LiveJob]:
+    """Instantiate real token payloads for a generated trace. Prompt/output
+    lengths are capped so tiny smoke models execute quickly; the ORIGINAL
+    observation (with its uncapped prompt_len and semantic text) is kept, so
+    the predictor and router see the workload the trace describes."""
+    rng = np.random.default_rng(seed)
+    out: List[LiveJob] = []
+    for j in trace_jobs:
+        stages = []
+        for s in j.stages:
+            obs = s.obs
+            if obs.src_cluster >= n_clusters:
+                obs = dataclasses.replace(obs,
+                                          src_cluster=obs.src_cluster
+                                          % n_clusters)
+            p = int(np.clip(s.obs.prompt_len // 32, 4, prompt_cap))
+            stages.append(LiveStage(
+                stage_id=s.stage_id, job_id=j.job_id, deps=list(s.deps),
+                obs=obs, interactive=s.interactive,
+                tokens=list(rng.integers(0, vocab, p)),
+                max_new=int(np.clip(s.true_len // 16, 4, gen_cap)),
+                nominal_len=int(s.true_len)))
+        out.append(LiveJob(job_id=j.job_id, app=j.app,
+                           interactive=j.interactive,
+                           arrival_s=j.arrival_s, stages=stages))
+    return out

@@ -153,6 +153,30 @@ class Engine:
         self.positions[slot] = 0
         self.finished.append(req)
 
+    # ------------------------------------------------------------ preemption
+    def cancel(self, req_id: int) -> Optional[Request]:
+        """Withdraw a request still waiting for admission (no KV held)."""
+        for i, r in enumerate(self.waiting):
+            if r.req_id == req_id:
+                return self.waiting.pop(i)
+        return None
+
+    def evict(self, req_id: int) -> Optional[Request]:
+        """Boundary preemption: release an active request between engine
+        steps. Its KV pages return to the pool (and the accountant), the slot
+        frees, and the partial output is discarded — the caller requeues the
+        stage, which restarts from its prompt (§III.D boundary semantics)."""
+        req = self.active.pop(req_id, None)
+        if req is None:
+            return self.cancel(req_id)
+        slot = self.slot_of.pop(req_id)
+        self.pool.free_seq(req_id)
+        self.pool.reclaim_unmapped()
+        self.free_slots.append(slot)
+        self.positions[slot] = 0
+        req.out.clear()
+        return req
+
     def drain(self, max_steps: int = 10_000) -> List[Request]:
         while (self.waiting or self.active) and max_steps:
             self.step()

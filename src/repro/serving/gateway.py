@@ -1,0 +1,579 @@
+"""Cross-cluster serving gateway: the LIVE plane of the Maestro hierarchy.
+
+``ClusterGateway`` owns a fleet of real ``NodeRuntime`` engines spread over
+simulated-RTT clusters and serves multi-stage workflow DAGs end-to-end
+through the paper's full pipeline:
+
+  global workflow-aware SRTF queue (Eq. 7-8) with boundary preemption
+    -> fitness routing over live NodeSignals (Eq. 5-6, Alg. 3)
+    -> rho-margin admission against each node's MemoryAccountant (§III.C)
+    -> real continuous-batching execution on the node engines
+    -> post-execution calibration back into rho + the WorkflowProfileStore.
+
+The event loop is STEP-DRIVEN: one ``step()`` advances a virtual clock by
+``tick_s`` and runs one iteration of every busy engine. Network RTT and
+cold-start activation enter as deterministic virtual delays (a dispatched
+stage reaches its engine only after rtt + T_act of virtual time), so runs
+are reproducible and unit-testable — no wall-clock sleeps anywhere.
+
+Pluggable policies (fcfs / least-loaded / maestro) reproduce the simulator's
+controlled comparison on real engines: all policies share the fleet, the
+admission substrate and the arrival trace; they differ only in queue order,
+routing and preemption.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.control_loop import MaestroController, model_name
+from repro.core.sched.fitness import NodeSignal, StageRequest
+from repro.core.sched.srtf import QueuedStage, SRTFQueue, state_key
+from repro.serving.cluster import LiveJob, LiveStage
+from repro.serving.engine import Request
+from repro.serving.node_runtime import NodeRuntime
+from repro.serving.telemetry import GatewayMetrics, Telemetry
+
+COLD_START_THRESHOLD_S = 0.01
+
+
+@dataclasses.dataclass
+class GatewayConfig:
+    tick_s: float = 0.05              # virtual seconds per engine iteration
+    interactive_budget_s: float = 1.5  # per-job interactive wait SLO
+    slo_factor: float = 3.0            # batch deadline = factor * isolated
+    static_reserve_tokens: int = 64    # non-predictive KV reservation (fcfs/ll)
+    max_inflight_per_node: Optional[int] = None   # default: node max_slots
+    reject_limit: int = 1000           # routing failures before job drop
+    preempt_gain_ticks: float = 2.0    # SRTF hysteresis, in ticks
+    preempt_cooldown_ticks: float = 10.0
+    refresh_every: int = 8             # aging refresh period (ticks)
+    headroom_sample_every: int = 10
+
+
+@dataclasses.dataclass
+class _InFlight:
+    stage: LiveStage
+    node_id: int
+    model: str
+    req: Request
+    submit_at: float                  # virtual time the engine may see it
+    submitted: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+class GatewayPolicy:
+    """Queue order + routing. Bound to one gateway instance."""
+    name = "base"
+    preemptive = False
+
+    def bind(self, gw: "ClusterGateway") -> None:
+        self.gw = gw
+
+    def push(self, stage: LiveStage, now: float) -> None:
+        raise NotImplementedError
+
+    def peek(self, now: float) -> Optional[LiveStage]:
+        raise NotImplementedError
+
+    def pop(self, now: float) -> Optional[LiveStage]:
+        raise NotImplementedError
+
+    def discard(self, stage: LiveStage) -> None:
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+    def refresh(self, now: float) -> None:
+        pass
+
+    def plan(self, stage: LiveStage, now: float
+             ) -> Tuple[Optional[int], Dict[str, float]]:
+        """Returns (node_id or None, meta: r_need / l_hat / t_act / rtt)."""
+        raise NotImplementedError
+
+    def on_finish(self, stage: LiveStage, out_len: int, now: float) -> None:
+        pass
+
+    # -------------------------------------------------- shared helpers
+    def _static_r_need(self, stage: LiveStage) -> float:
+        prof = self.gw.profiles[self.gw.model_of(stage)]
+        return prof.r_kv(len(stage.tokens),
+                         self.gw.cfg.static_reserve_tokens)
+
+    def _feasible(self, nid: int, r_need: float) -> bool:
+        gw = self.gw
+        return (gw.node_load[nid] < gw.inflight_cap[nid]
+                and gw.fleet[nid].acc.can_admit(r_need))
+
+
+class FCFSPolicy(GatewayPolicy):
+    """Global FIFO + first feasible node; static KV reservation."""
+    name = "fcfs"
+
+    def __init__(self) -> None:
+        self.q: Deque[LiveStage] = collections.deque()
+
+    def push(self, stage, now):
+        self.q.append(stage)
+
+    def peek(self, now):
+        return self.q[0] if self.q else None
+
+    def pop(self, now):
+        return self.q.popleft() if self.q else None
+
+    def discard(self, stage):
+        try:
+            self.q.remove(stage)
+        except ValueError:
+            pass
+
+    def __len__(self):
+        return len(self.q)
+
+    def plan(self, stage, now):
+        r_need = self._static_r_need(stage)
+        model = self.gw.model_of(stage)
+        for nid in sorted(self.gw.fleet):
+            if self._feasible(nid, r_need):
+                node = self.gw.fleet[nid]
+                return nid, {"r_need": r_need, "l_hat": None,
+                             "t_act": node.t_act(model),
+                             "rtt": self.gw.rtt(stage, nid)}
+        return None, {"r_need": r_need}
+
+
+class LeastLoadedPolicy(FCFSPolicy):
+    """Global FIFO + least-inflight feasible node."""
+    name = "least-loaded"
+
+    def plan(self, stage, now):
+        r_need = self._static_r_need(stage)
+        model = self.gw.model_of(stage)
+        cands = [nid for nid in self.gw.fleet
+                 if self._feasible(nid, r_need)]
+        if not cands:
+            return None, {"r_need": r_need}
+        nid = min(cands, key=lambda n: (self.gw.node_load[n], n))
+        return nid, {"r_need": r_need, "l_hat": None,
+                     "t_act": self.gw.fleet[nid].t_act(model),
+                     "rtt": self.gw.rtt(stage, nid)}
+
+
+class MaestroPolicy(GatewayPolicy):
+    """Workflow-aware SRTF + fitness routing + rho-margin admission +
+    boundary preemption — the full hierarchy on live engines."""
+    name = "maestro"
+    preemptive = True
+
+    def __init__(self, ctl: MaestroController) -> None:
+        self.ctl = ctl
+        self.entries: Dict[int, QueuedStage] = {}   # stage_id -> queue entry
+        self.preds: Dict[int, Dict[str, float]] = {}
+
+    # ------------------------------------------------------------ prediction
+    def _pred(self, stage: LiveStage) -> Dict[str, float]:
+        p = self.preds.get(stage.stage_id)
+        if p is None:
+            l_hat, p_tool, r_kv_hat = self.ctl.predict_stage(stage.obs)
+            p = {"l_hat": l_hat, "p_tool": p_tool, "r_kv_hat": r_kv_hat}
+            self.preds[stage.stage_id] = p
+        return p
+
+    def _t_exec_v(self, stage: LiveStage, l_hat: float) -> float:
+        """Predicted stage duration in VIRTUAL seconds (prefill tick +
+        one decode tick per predicted token, capped by the decode budget)."""
+        return self.gw.cfg.tick_s * (1.0 + min(l_hat, stage.max_new))
+
+    # ------------------------------------------------------------ queue ops
+    def push(self, stage, now):
+        p = self._pred(stage)
+        key = state_key(stage.obs.app, stage.obs.role,
+                        stage.obs.invocation_idx, p["p_tool"])
+        qs = QueuedStage(stage_id=stage.stage_id, job_id=stage.job_id,
+                         interactive=stage.interactive,
+                         t_exec=self._t_exec_v(stage, p["l_hat"]),
+                         t_future=self.ctl.wf_profiles.future_median(key),
+                         enqueue_time=now)
+        self.entries[stage.stage_id] = qs
+        self.ctl.queue.push(qs, now)
+
+    def peek(self, now):
+        qs = self.ctl.queue.peek()
+        return None if qs is None else self.gw.stage_by_id[qs.stage_id]
+
+    def pop(self, now):
+        qs = self.ctl.queue.pop(now)
+        if qs is None:
+            return None
+        self.entries.pop(qs.stage_id, None)
+        return self.gw.stage_by_id[qs.stage_id]
+
+    def discard(self, stage):
+        qs = self.entries.pop(stage.stage_id, None)
+        if qs is not None:
+            self.ctl.queue.remove(qs)
+
+    def __len__(self):
+        return len(self.ctl.queue)
+
+    def refresh(self, now):
+        self.ctl.queue.refresh(now)
+
+    # --------------------------------------------------------------- routing
+    def plan(self, stage, now):
+        gw = self.gw
+        p = self._pred(stage)
+        r_need = self.ctl.rho.r_need(p["r_kv_hat"])
+        model = gw.model_of(stage)
+        prof = gw.profiles[model]
+        req = StageRequest(
+            stage_id=stage.stage_id, model=model, r_need=r_need,
+            interactive=stage.interactive,
+            src_cluster=stage.obs.src_cluster,
+            t_exec=prof.t_exec(stage.obs.prompt_len, p["l_hat"]))
+        signals = [gw.signal(nid) for nid in gw.fleet
+                   if gw.node_load[nid] < gw.inflight_cap[nid]]
+        sel = self.ctl.router.select(
+            req, signals,
+            t_act_of=lambda sig, m: gw.fleet[sig.node_id].t_act(m),
+            c_deg_of=lambda sig, rq: None)   # no live degradation plans yet
+        if sel is None:
+            return None, {"r_need": r_need, "l_hat": p["l_hat"]}
+        nid = sel[0].node_id
+        return nid, {"r_need": r_need, "l_hat": p["l_hat"],
+                     "t_act": gw.fleet[nid].t_act(model),
+                     "rtt": gw.rtt(stage, nid), "score": sel[1]}
+
+    # ----------------------------------------------------------- calibration
+    def on_finish(self, stage, out_len, now):
+        p = self._pred(stage)
+        prof = self.gw.profiles[self.gw.model_of(stage)]
+        # Calibrate on the SAME basis the prediction used (the uncapped
+        # trace-scale lengths): the realized output, mapped back through the
+        # live decode budget, against L_hat. Comparing live capped bytes to
+        # the uncapped R_kv_hat would make the error identically zero and
+        # pin rho to its floor.
+        nominal = stage.nominal_len or stage.max_new
+        actual_len = nominal * out_len / max(stage.max_new, 1)
+        actual_kv = prof.r_kv(stage.obs.prompt_len, actual_len)
+        self.ctl.rho.observe(actual_kv, max(p["r_kv_hat"], 1.0))
+        key = state_key(stage.obs.app, stage.obs.role,
+                        stage.obs.invocation_idx, p["p_tool"])
+        self.ctl.wf_profiles.record(key, self.gw.job_remaining_v(stage))
+
+
+# ---------------------------------------------------------------------------
+# The gateway
+# ---------------------------------------------------------------------------
+
+def make_policy(name: str, ctl: Optional[MaestroController]) -> GatewayPolicy:
+    if name == "fcfs":
+        return FCFSPolicy()
+    if name == "least-loaded":
+        return LeastLoadedPolicy()
+    if name == "maestro":
+        if ctl is None:
+            raise ValueError("maestro policy needs a MaestroController "
+                             "(pass predictor= to ClusterGateway)")
+        return MaestroPolicy(ctl)
+    raise ValueError(f"unknown gateway policy {name!r}")
+
+
+class ClusterGateway:
+    def __init__(self, fleet: Sequence[NodeRuntime], rtt_s: np.ndarray,
+                 predictor=None, policy: str = "maestro",
+                 cfg: Optional[GatewayConfig] = None,
+                 telemetry: Optional[Telemetry] = None):
+        self.cfg = cfg or GatewayConfig()
+        self.fleet: Dict[int, NodeRuntime] = {n.node_id: n for n in fleet}
+        self.rtt_s = np.asarray(rtt_s, float)
+        self.profiles = {name: p
+                         for name, p in next(iter(self.fleet.values()))
+                         .profiles.items()}
+        self.telemetry = telemetry or Telemetry()
+        self.ctl: Optional[MaestroController] = None
+        if predictor is not None:
+            queue = SRTFQueue(
+                preempt_gain_s=self.cfg.preempt_gain_ticks * self.cfg.tick_s,
+                cooldown_s=self.cfg.preempt_cooldown_ticks * self.cfg.tick_s)
+            self.ctl = MaestroController(predictor, self.profiles,
+                                         self.rtt_s, queue=queue)
+        self.policy = make_policy(policy, self.ctl)
+        self.policy.bind(self)
+
+        # clock + workload state
+        self.tick = 0
+        self.stage_by_id: Dict[int, LiveStage] = {}
+        self.jobs: Dict[int, LiveJob] = {}
+        self.pending_deps: Dict[int, int] = {}
+        self.ready_t: Dict[int, float] = {}
+        self.done: set = set()
+        self.job_done_stages: Dict[int, int] = {}
+        self.job_finish: Dict[int, float] = {}
+        self.dropped: set = set()
+        self.arrivals: List[Tuple[float, int]] = []   # (arrival_s, job_id)
+        self.inflight: Dict[int, _InFlight] = {}      # stage_id -> record
+        self.node_load: Dict[int, int] = {nid: 0 for nid in self.fleet}
+        self.inflight_cap: Dict[int, int] = {
+            nid: (self.cfg.max_inflight_per_node
+                  or self.fleet[nid].max_slots)
+            for nid in self.fleet}
+        self.qd_ewma: Dict[int, float] = {nid: 0.0 for nid in self.fleet}
+        self._rejects: Dict[int, int] = collections.defaultdict(int)
+
+    # ----------------------------------------------------------------- views
+    @property
+    def now(self) -> float:
+        return self.tick * self.cfg.tick_s
+
+    def model_of(self, stage: LiveStage) -> str:
+        return model_name(stage.obs, self.profiles)
+
+    def rtt(self, stage: LiveStage, nid: int) -> float:
+        src = stage.obs.src_cluster % self.rtt_s.shape[0]
+        return float(self.rtt_s[src, self.fleet[nid].cluster_id])
+
+    def signal(self, nid: int) -> NodeSignal:
+        """Live NodeSignal with the gateway's virtual queue-delay EWMA (the
+        runtime's own queue statistic is engine-local and not in seconds)."""
+        sig = self.fleet[nid].signal()
+        sig.queue_delay_s = self.qd_ewma[nid]
+        return sig
+
+    def job_remaining_v(self, stage: LiveStage) -> float:
+        """Remaining virtual execution time of the stage's job, AFTER this
+        stage — the Eq. 8 sample recorded into the WorkflowProfileStore."""
+        job = self.jobs[stage.job_id]
+        return sum(self.cfg.tick_s * (1.0 + s.max_new) for s in job.stages
+                   if s.stage_id not in self.done
+                   and s.stage_id != stage.stage_id)
+
+    # ------------------------------------------------------------- workload
+    def submit_jobs(self, jobs: Sequence[LiveJob]) -> None:
+        for j in jobs:
+            self.jobs[j.job_id] = j
+            self.job_done_stages.setdefault(j.job_id, 0)
+            if j.deadline_s <= 0.0:
+                j.deadline_s = self._deadline(j)
+            self.arrivals.append((j.arrival_s, j.job_id))
+            for s in j.stages:
+                self.stage_by_id[s.stage_id] = s
+                self.pending_deps[s.stage_id] = len(s.deps)
+        self.arrivals.sort()
+
+    def _deadline(self, job: LiveJob) -> float:
+        """SLO profiling against the virtual execution model: critical-path
+        time with everything warm, scaled by slo_factor."""
+        finish: Dict[int, float] = {}
+        for s in job.stages:
+            start = max((finish[d] for d in s.deps), default=0.0)
+            finish[s.stage_id] = start + self.cfg.tick_s * (2.0 + s.max_new)
+        return self.cfg.slo_factor * max(finish.values())
+
+    # ------------------------------------------------------------ event loop
+    def run(self, jobs: Sequence[LiveJob],
+            max_ticks: Optional[int] = None) -> GatewayMetrics:
+        self.submit_jobs(jobs)
+        if max_ticks is None:
+            n_stage_ticks = sum(s.max_new + 6 for j in jobs
+                                for s in j.stages)
+            max_ticks = 40 * n_stage_ticks + 4000
+        while self._unfinished() and self.tick < max_ticks:
+            self.step()
+        return self.metrics()
+
+    def _unfinished(self) -> bool:
+        return any(j not in self.job_finish and j not in self.dropped
+                   for j in self.jobs)
+
+    def metrics(self) -> GatewayMetrics:
+        return self.telemetry.summary(
+            self.policy.name, list(self.jobs.values()), self.job_finish,
+            self.cfg.interactive_budget_s, self.now)
+
+    def step(self) -> None:
+        now = self.now
+        # 1) arrivals: source stages of newly arrived jobs become ready
+        while self.arrivals and self.arrivals[0][0] <= now:
+            _, jid = self.arrivals.pop(0)
+            for s in self.jobs[jid].stages:
+                if not s.deps:
+                    self._mark_ready(s, now)
+        # 2) SRTF aging refresh
+        if self.tick % self.cfg.refresh_every == 0:
+            self.policy.refresh(now)
+        # 3) global-queue dispatch (routing + admission + preemption)
+        self._dispatch(now)
+        # 4) stages whose rtt + activation virtual delay elapsed hit engines
+        self._flush_submissions(now)
+        # 5) one real iteration of every busy engine
+        for nid, node in self.fleet.items():
+            for model, reqs in node.step().items():
+                for req in reqs:
+                    self._on_finish(req, now)
+        # 6) telemetry sampling
+        if self.tick % self.cfg.headroom_sample_every == 0:
+            for nid, node in self.fleet.items():
+                self.telemetry.sample_headroom(nid, node.acc.headroom)
+        self.tick += 1
+
+    # -------------------------------------------------------------- phases
+    def _mark_ready(self, stage: LiveStage, now: float) -> None:
+        if stage.job_id in self.dropped:
+            return
+        self.ready_t[stage.stage_id] = now
+        ev = self.telemetry.event(stage.stage_id, stage.job_id,
+                                  stage.interactive)
+        ev.ready_t = now
+        ev.model = self.model_of(stage)
+        self.policy.push(stage, now)
+
+    def _dispatch(self, now: float) -> None:
+        while len(self.policy):
+            stage = self.policy.peek(now)
+            if stage is None:
+                break
+            if stage.job_id in self.dropped or stage.stage_id in self.done:
+                self.policy.pop(now)
+                continue
+            nid, meta = self.policy.plan(stage, now)
+            if nid is None:
+                # memory infeasibility (a node had a free slot yet could not
+                # admit) is an ADMISSION rejection; all-slots-busy is plain
+                # queueing and neither counted nor held against the job
+                slots_free = any(self.node_load[n] < self.inflight_cap[n]
+                                 for n in self.fleet)
+                if slots_free:
+                    self.telemetry.admission_rejections += 1
+                    self.telemetry.event(stage.stage_id, stage.job_id,
+                                         stage.interactive).rejections += 1
+                    self._rejects[stage.stage_id] += 1
+                if (self.policy.preemptive and stage.interactive
+                        and self._try_preempt(stage, now)):
+                    continue                   # retry the head post-eviction
+                if self._rejects[stage.stage_id] > self.cfg.reject_limit:
+                    self._drop_job(stage.job_id, now)
+                    continue
+                break                          # head-of-line block
+            self.policy.pop(now)
+            self._dispatch_to(stage, nid, meta, now)
+
+    def _dispatch_to(self, stage: LiveStage, nid: int,
+                     meta: Dict[str, float], now: float) -> None:
+        node = self.fleet[nid]
+        model = self.model_of(stage)
+        rtt = meta.get("rtt", self.rtt(stage, nid))
+        t_act = meta.get("t_act", node.t_act(model))
+        if t_act > COLD_START_THRESHOLD_S:
+            self.telemetry.cold_starts += 1
+        l_hat = meta.get("l_hat")
+        req = Request(req_id=stage.stage_id, tokens=list(stage.tokens),
+                      max_new=stage.max_new,
+                      pred_len=(None if l_hat is None
+                                else float(min(l_hat, stage.max_new))))
+        self.inflight[stage.stage_id] = _InFlight(
+            stage=stage, node_id=nid, model=model, req=req,
+            submit_at=now + rtt + t_act)
+        self.node_load[nid] += 1
+        wait = max(0.0, now - self.ready_t.get(stage.stage_id, now))
+        self.qd_ewma[nid] = 0.8 * self.qd_ewma[nid] + 0.2 * (wait + t_act)
+        ev = self.telemetry.event(stage.stage_id, stage.job_id,
+                                  stage.interactive)
+        ev.node_id, ev.dispatch_t = nid, now
+        ev.rtt_s, ev.t_act_s = rtt, t_act
+
+    def _flush_submissions(self, now: float) -> None:
+        for rec in self.inflight.values():
+            if rec.submitted or rec.submit_at > now + 1e-9:
+                continue
+            node = self.fleet[rec.node_id]
+            t0 = time.perf_counter()
+            node.submit(rec.model, rec.req)   # real activation on demand
+            rec.submitted = True
+            ev = self.telemetry.event(rec.stage.stage_id, rec.stage.job_id,
+                                      rec.stage.interactive)
+            ev.start_t = now
+            ev.wall_act_s = time.perf_counter() - t0
+
+    def _on_finish(self, req: Request, now: float) -> None:
+        rec = self.inflight.pop(req.req_id, None)
+        if rec is None:
+            return
+        stage = rec.stage
+        self.node_load[rec.node_id] -= 1
+        self.done.add(stage.stage_id)
+        self._rejects.pop(stage.stage_id, None)
+        ev = self.telemetry.event(stage.stage_id, stage.job_id,
+                                  stage.interactive)
+        ev.finish_t, ev.out_len = now, len(req.out)
+        self.policy.on_finish(stage, len(req.out), now)
+        job = self.jobs[stage.job_id]
+        self.job_done_stages[stage.job_id] += 1
+        if self.job_done_stages[stage.job_id] == len(job.stages):
+            self.job_finish[stage.job_id] = now
+        # successor re-queueing: every dependent whose deps are all done
+        # re-enters the GLOBAL queue and contends under the policy's order
+        for st in job.stages:
+            if stage.stage_id in st.deps:
+                self.pending_deps[st.stage_id] -= 1
+                if self.pending_deps[st.stage_id] == 0:
+                    self._mark_ready(st, now)
+
+    # ---------------------------------------------------------- preemption
+    def _try_preempt(self, stage: LiveStage, now: float) -> bool:
+        """Boundary preemption: evict a batch stage between engine steps so
+        an infeasible interactive head can place. Guarded by the SRTF
+        queue's hysteresis + cooldown; the victim restarts from its prompt."""
+        assert self.ctl is not None
+        pol = self.policy
+        cand_qs = QueuedStage(
+            stage_id=stage.stage_id, job_id=stage.job_id, interactive=True,
+            t_exec=self.cfg.tick_s * (1.0 + stage.max_new), t_future=0.0)
+        victims = sorted(
+            (r for r in self.inflight.values() if not r.stage.interactive),
+            key=lambda r: -(r.stage.max_new - len(r.req.out)))
+        for rec in victims:
+            remaining_v = self.cfg.tick_s * max(
+                1.0, 1.0 + rec.stage.max_new - len(rec.req.out))
+            run_qs = QueuedStage(
+                stage_id=rec.stage.stage_id, job_id=rec.stage.job_id,
+                interactive=False, t_exec=remaining_v, t_future=0.0)
+            if not self.ctl.queue.should_preempt(run_qs, cand_qs,
+                                                 remaining_v, now):
+                continue
+            if rec.submitted:
+                if self.fleet[rec.node_id].preempt(rec.model,
+                                                   rec.req.req_id) is None:
+                    continue   # finished this very tick; nothing to evict
+            self.inflight.pop(rec.stage.stage_id, None)
+            self.node_load[rec.node_id] -= 1
+            self.telemetry.preemptions += 1
+            ev = self.telemetry.event(rec.stage.stage_id, rec.stage.job_id,
+                                      False)
+            ev.preemptions += 1
+            # bank the aborted attempt's wait before _mark_ready resets it
+            ev.prior_wait_s += (max(0.0, ev.dispatch_t - ev.ready_t)
+                                + ev.rtt_s + ev.t_act_s)
+            ev.rtt_s = ev.t_act_s = 0.0
+            self._mark_ready(rec.stage, now)   # requeue from scratch
+            return True
+        return False
+
+    def _drop_job(self, job_id: int, now: float) -> None:
+        """Admission gave up on this job (reject_limit exceeded): withdraw
+        its queued stages so the gateway keeps serving everyone else."""
+        self.dropped.add(job_id)
+        self.telemetry.dropped_jobs += 1
+        for s in self.jobs[job_id].stages:
+            if s.stage_id not in self.done:
+                self.policy.discard(s)

@@ -64,8 +64,11 @@ class NodeRuntime:
     def activate(self, name: str) -> float:
         """Make `name` servable; returns measured activation seconds."""
         t0 = time.perf_counter()
+        # models with ANY queued work are in-flight: evicting one whose
+        # requests are still waiting for admission would strand them (step()
+        # skips off-device engines)
         self.residency.pinned = {m for m, e in self.engines.items()
-                                 if e.active}
+                                 if e.active or e.waiting}
         ok, _ = self.residency.ensure_gpu(name)
         if not ok:
             raise RuntimeError(f"cannot activate {name}")
@@ -106,9 +109,22 @@ class NodeRuntime:
             self.activate(model)
         self.engines[model].submit(req)
 
+    def preempt(self, model: str, req_id: int) -> Optional[Request]:
+        """Boundary-preempt a request on this node (waiting or active);
+        returns the withdrawn Request (partial output discarded) or None."""
+        eng = self.engines.get(model)
+        return None if eng is None else eng.evict(req_id)
+
+    def t_act(self, model: str) -> float:
+        """Estimated activation latency (no side effects) — the T_act of
+        Eq. 6 that the cross-cluster router consumes."""
+        return self.residency.activation_latency(model)
+
     def step(self) -> Dict[str, list]:
         out = {}
         for name, eng in self.engines.items():
+            if (eng.waiting or eng.active) and name not in self.device_params:
+                self.activate(name)   # self-heal: offloaded with queued work
             if name in self.device_params and (eng.waiting or eng.active):
                 eng.step()
             if eng.finished:

@@ -1,0 +1,143 @@
+"""Gateway telemetry: per-stage timing records, KV-headroom samples and
+SLO/latency aggregation for the LIVE serving plane.
+
+Times are in the gateway's virtual clock (deterministic step-driven seconds),
+except ``wall_act_s`` which records the real measured activation cost of the
+underlying ``NodeRuntime`` (host->device transfer + engine construction).
+The summary mirrors ``repro.sim.simulator.SimResult`` so the live plane and
+the trace-driven simulator report the same policy-comparison columns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StageEvent:
+    """Lifecycle of one workflow stage through the gateway."""
+    stage_id: int
+    job_id: int
+    interactive: bool
+    model: str = ""
+    node_id: int = -1
+    ready_t: float = 0.0          # deps satisfied, entered the global queue
+    dispatch_t: float = 0.0       # popped + routed by the policy
+    start_t: float = 0.0          # submitted to the node engine (post rtt+act)
+    finish_t: float = 0.0         # engine emitted the final token
+    rtt_s: float = 0.0
+    t_act_s: float = 0.0          # virtual activation latency (residency est.)
+    wall_act_s: float = 0.0       # measured wall-clock activation
+    out_len: int = 0
+    preemptions: int = 0          # times this stage was evicted + requeued
+    rejections: int = 0           # routing/admission failures observed
+    prior_wait_s: float = 0.0     # wait accrued by attempts aborted by
+                                  # preemption (so eviction can't hide delay)
+
+    @property
+    def queue_delay_s(self) -> float:
+        """Stage wait as the sim accounts it: queueing + network + cold start,
+        summed over every dispatch attempt."""
+        return (self.prior_wait_s + max(0.0, self.dispatch_t - self.ready_t)
+                + self.rtt_s + self.t_act_s)
+
+
+@dataclasses.dataclass
+class GatewayMetrics:
+    policy: str
+    slo_attainment: float
+    mean_latency_s: float
+    p95_latency_s: float
+    interactive_queue_delay_s: float
+    batch_queue_delay_s: float
+    finished_jobs: int
+    dropped_jobs: int
+    finished_stages: int
+    cold_starts: int
+    preemptions: int
+    admission_rejections: int
+    makespan_s: float
+    throughput_stages_per_s: float
+    min_headroom_bytes: float
+    generated_tokens: int
+
+    def row(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+class Telemetry:
+    """Collects stage events + node headroom samples during a gateway run."""
+
+    def __init__(self) -> None:
+        self.events: Dict[int, StageEvent] = {}
+        self.headroom: Dict[int, List[float]] = {}
+        self.cold_starts = 0
+        self.preemptions = 0
+        self.admission_rejections = 0
+        self.dropped_jobs = 0
+
+    # ------------------------------------------------------------- recording
+    def event(self, stage_id: int, job_id: int, interactive: bool) -> StageEvent:
+        ev = self.events.get(stage_id)
+        if ev is None:
+            ev = StageEvent(stage_id=stage_id, job_id=job_id,
+                            interactive=interactive)
+            self.events[stage_id] = ev
+        return ev
+
+    def sample_headroom(self, node_id: int, headroom: float) -> None:
+        self.headroom.setdefault(node_id, []).append(float(headroom))
+
+    # ------------------------------------------------------------ aggregation
+    def summary(self, policy: str, jobs, job_finish: Dict[int, float],
+                interactive_budget_s: float, now: float) -> GatewayMetrics:
+        """``jobs``: iterable with .job_id, .interactive, .arrival_s,
+        .deadline_s and .stages (each stage with .stage_id)."""
+        lat: List[float] = []
+        slo_ok: List[bool] = []
+        int_delays: List[float] = []
+        batch_delays: List[float] = []
+        for j in jobs:
+            waits = sum(self.events[s.stage_id].queue_delay_s
+                        for s in j.stages if s.stage_id in self.events
+                        and self.events[s.stage_id].finish_t > 0)
+            if j.interactive:
+                int_delays.append(waits)
+            else:
+                batch_delays.append(waits)
+            if j.job_id not in job_finish:
+                slo_ok.append(False)
+                continue
+            l = job_finish[j.job_id] - j.arrival_s
+            lat.append(l)
+            if j.interactive:
+                slo_ok.append(waits <= interactive_budget_s)
+            else:
+                slo_ok.append(l <= j.deadline_s)
+        finished = [e for e in self.events.values() if e.finish_t > 0]
+        makespan = max((e.finish_t for e in finished), default=now)
+        head_min = min((min(v) for v in self.headroom.values() if v),
+                       default=float("inf"))
+        return GatewayMetrics(
+            policy=policy,
+            slo_attainment=float(np.mean(slo_ok)) if slo_ok else 0.0,
+            mean_latency_s=float(np.mean(lat)) if lat else float("inf"),
+            p95_latency_s=(float(np.percentile(lat, 95))
+                           if lat else float("inf")),
+            interactive_queue_delay_s=(float(np.mean(int_delays))
+                                       if int_delays else 0.0),
+            batch_queue_delay_s=(float(np.mean(batch_delays))
+                                 if batch_delays else 0.0),
+            finished_jobs=len(job_finish),
+            dropped_jobs=self.dropped_jobs,
+            finished_stages=len(finished),
+            cold_starts=self.cold_starts,
+            preemptions=self.preemptions,
+            admission_rejections=self.admission_rejections,
+            makespan_s=float(makespan),
+            throughput_stages_per_s=(len(finished) / makespan
+                                     if makespan > 0 else 0.0),
+            min_headroom_bytes=float(head_min),
+            generated_tokens=sum(e.out_len for e in finished))

@@ -1,9 +1,9 @@
-"""Predictor stack: GBDT learning, isotonic monotonicity (property), metric
-correctness, the two-phase Maestro-Pred pipeline + its baselines/ablations."""
-import hypothesis.strategies as st
+"""Predictor stack: GBDT learning, metric correctness, the two-phase
+Maestro-Pred pipeline + its baselines/ablations. Property-based companions
+(isotonic monotonicity) live in test_properties.py, which skips itself when
+hypothesis is unavailable."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.core.predictor import (GBDT, GBDTConfig, IsotonicCalibrator,
                                   LinearBaseline, MaestroPred,
@@ -41,16 +41,13 @@ def test_gbdt_early_stopping():
     assert len(m.trees) < 200
 
 
-@settings(max_examples=40, deadline=None)
-@given(st.lists(st.tuples(st.floats(0, 1), st.integers(0, 1)),
-                min_size=5, max_size=200))
-def test_isotonic_monotone_property(pairs):
-    scores = np.array([p[0] for p in pairs])
-    labels = np.array([float(p[1]) for p in pairs])
+def test_isotonic_monotone_fixed_grid():
+    """Deterministic spot-check of the property in test_properties.py."""
+    rng = np.random.default_rng(0)
+    scores = rng.uniform(0, 1, 100)
+    labels = (scores + rng.normal(0, 0.3, 100) > 0.5).astype(float)
     iso = IsotonicCalibrator().fit(scores, labels)
-    # transform is monotone non-decreasing on any query grid
-    grid = np.linspace(0, 1, 64)
-    out = iso.transform(grid)
+    out = iso.transform(np.linspace(0, 1, 64))
     assert np.all(np.diff(out) >= -1e-9)
     assert np.all((out >= 0) & (out <= 1))
 

@@ -1,12 +1,11 @@
-"""Scheduler components: rho margin adaptation, robust normalization bounds,
-SRTF ordering/aging/preemption hysteresis, fitness routing feasibility."""
-import hypothesis.strategies as st
+"""Scheduler components: rho margin adaptation, SRTF ordering/aging/
+preemption hysteresis, fitness routing feasibility. The robust-normalizer
+bounds property lives in test_properties.py (skipped without hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.core.sched.fitness import (FitnessRouter, NodeSignal,
-                                      RobustNormalizer, StageRequest)
+                                      StageRequest)
 from repro.core.sched.margins import RhoEstimator
 from repro.core.sched.srtf import QueuedStage, SRTFQueue, WorkflowProfileStore
 
@@ -27,17 +26,6 @@ def test_rho_never_negative_or_huge():
     for _ in range(50):
         rho.observe(50.0, 100.0)     # consistent OVERestimation
     assert rho.rho >= rho.lo
-
-
-@settings(max_examples=40, deadline=None)
-@given(st.lists(st.floats(-1e6, 1e6), min_size=1, max_size=200),
-       st.floats(-1e7, 1e7))
-def test_robust_normalizer_bounds(history, query):
-    n = RobustNormalizer()
-    for v in history:
-        n.observe("m", v)
-    out = n.norm("m", query)
-    assert 0.0 <= out <= 1.0
 
 
 def test_srtf_orders_by_remaining_time():
