@@ -3,16 +3,10 @@ Baseline (load-balancing) vs BinPack-only (gamma=0) vs Maestro-Aff
 (gamma=0.25) on the hybrid 3-local + 2-remote topology."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import banner, get_predictor, get_trace, save_result
-from repro.sim.policies import BaselineLB, BinPackOnly, Maestro
+from repro.core.sched.policies import make_policy
+from repro.core.topology import HYBRID_RTT as RTT
 from repro.sim.simulator import SimConfig, Simulator
-
-# hybrid topology: clusters 0/1 local (3 nodes), cluster 2 remote (2 nodes)
-RTT = np.array([[0.0005, 0.002, 0.120],
-                [0.002, 0.0005, 0.140],
-                [0.120, 0.140, 0.0005]])
 
 
 def main(n_jobs: int = 500, fast: bool = False):
@@ -23,11 +17,12 @@ def main(n_jobs: int = 500, fast: bool = False):
     rows = []
     for rate in rates:
         row = {"rate": rate}
-        for mk, tag in ((lambda: BaselineLB(mp), "baseline"),
-                        (lambda: BinPackOnly(mp), "binpack"),
-                        (lambda: Maestro(mp, gamma=0.25), "maestro-aff")):
+        for name, tag in (("baseline-lb", "baseline"),
+                          ("binpack", "binpack"),
+                          ("maestro-aff", "maestro-aff")):
             jobs = get_trace(n_jobs, rate=rate, seed=41)
-            r = Simulator(jobs, mk(), cfg, rtt=RTT).run()
+            r = Simulator(jobs, make_policy(name, predictor=mp),
+                          cfg, rtt=RTT).run()
             row[tag] = round(r.interactive_queue_delay_s, 3)
         rows.append(row)
         print(f"rate={rate}: baseline={row['baseline']:.3f}s "

@@ -1,24 +1,25 @@
 """Live serving-plane benchmark: the sim's policy comparison on REAL engines.
 
 Serves the same generated multi-agent trace through ``ClusterGateway`` under
-fcfs / least-loaded / maestro on an identical fleet (fresh engines per
-policy, shared model weights), and reports live throughput, p95 latency,
-interactive queue delay and SLO attainment — the prototype-experiment
-counterpart of Fig. 7 / Table II. The returned payload is persisted by
-``benchmarks.run`` as ``BENCH_gateway.json`` so the perf trajectory is
-machine-trackable across PRs.
+EVERY policy in the unified registry (fcfs / least-loaded / edf /
+oracle-srtf / maestro / maestro-np / baseline-lb / binpack / maestro-aff) on
+an identical fleet (fresh engines per policy, shared model weights), and
+reports live throughput, p95 latency, interactive queue delay and SLO
+attainment — the prototype-experiment counterpart of Fig. 7 / Table II /
+Table VIII, with one row per registered policy. The returned payload is
+persisted by ``benchmarks.run`` as ``BENCH_gateway.json`` so the live-plane
+perf trajectory is machine-trackable across PRs.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 from benchmarks.common import banner, get_predictor, get_trace
+from repro.core.sched.policies import registered_policies
 from repro.serving.cluster import (ClusterSpec, NodeSpec, build_fleet,
                                    build_zoo, jobs_from_trace)
-from repro.serving.gateway import ClusterGateway, GatewayConfig
-
-POLICIES = ("fcfs", "least-loaded", "maestro")
+from repro.serving.gateway import ClusterGateway
 
 COLS = ("policy", "slo_attainment", "interactive_queue_delay_s",
         "p95_latency_s", "throughput_stages_per_s", "cold_starts",
@@ -33,9 +34,10 @@ def _spec() -> ClusterSpec:
                               NodeSpec(2, max_slots=2)))
 
 
-def main(n_jobs: int = 24, rate: float = 2.0, fast: bool = False,
-         seed: int = 13) -> Dict:
+def main(n_jobs: int = 240, rate: float = 2.0, fast: bool = False,
+         seed: int = 13, policies: Optional[Sequence[str]] = None) -> Dict:
     banner(f"gateway: live cross-cluster serving ({n_jobs} jobs)")
+    names = tuple(policies) if policies else registered_policies()
     pred = get_predictor(n_jobs=800 if fast else 1500, fast=fast)
     spec = _spec()
     zoo, host = build_zoo(spec.model_names)
@@ -43,13 +45,14 @@ def main(n_jobs: int = 24, rate: float = 2.0, fast: bool = False,
     n_clusters = spec.rtt_s.shape[0]
 
     rows: List[Dict] = []
-    for policy in POLICIES:
+    for policy in names:
         fleet = build_fleet(spec, zoo=zoo, host=host)
         jobs = jobs_from_trace(trace, n_clusters=n_clusters, seed=seed)
         t0 = time.time()
         gw = ClusterGateway(fleet, spec.rtt_s, predictor=pred, policy=policy)
         m = gw.run(jobs)
         wall = time.time() - t0
+        assert m.finished_jobs > 0, f"{policy}: no jobs finished live"
         row = m.row()
         row["wall_s"] = round(wall, 1)
         row["virtual_s"] = round(gw.now, 2)
@@ -62,22 +65,25 @@ def main(n_jobs: int = 24, rate: float = 2.0, fast: bool = False,
               f"fin={m.finished_jobs}/{n_jobs} ({wall:.0f}s wall)")
 
     by = {r["policy"]: r for r in rows}
-    gain = (by["fcfs"]["interactive_queue_delay_s"]
-            - by["maestro"]["interactive_queue_delay_s"])
-    print(f"[gateway] maestro vs fcfs interactive queue delay: "
-          f"{'-' if gain >= 0 else '+'}{abs(gain):.2f}s "
-          f"({'better' if gain > 0 else 'WORSE — investigate'})")
-    return {
+    payload = {
         "n_jobs": n_jobs,
         "n_stages": sum(len(j.stages) for j in trace),
         "rate_jobs_per_s": rate,
         "nodes": len(spec.nodes),
         "clusters": spec.n_clusters,
         "zoo": list(spec.model_names),
-        "maestro_minus_fcfs_interactive_qd_s": -gain,
+        "policies": list(names),
         "rows": rows,
     }
+    if "fcfs" in by and "maestro" in by:
+        gain = (by["fcfs"]["interactive_queue_delay_s"]
+                - by["maestro"]["interactive_queue_delay_s"])
+        print(f"[gateway] maestro vs fcfs interactive queue delay: "
+              f"{'-' if gain >= 0 else '+'}{abs(gain):.2f}s "
+              f"({'better' if gain > 0 else 'WORSE — investigate'})")
+        payload["maestro_minus_fcfs_interactive_qd_s"] = -gain
+    return payload
 
 
 if __name__ == "__main__":
-    main(fast=True)
+    main(n_jobs=24, fast=True)

@@ -3,7 +3,7 @@ ratio 0.6) as the node count grows — Maestro vs Maestro w/o preemption."""
 from __future__ import annotations
 
 from benchmarks.common import banner, get_predictor, get_trace, save_result
-from repro.sim.policies import Maestro, MaestroNoPreempt
+from repro.core.sched.policies import make_policy
 from repro.sim.simulator import SimConfig, Simulator
 
 
@@ -14,11 +14,10 @@ def main(n_jobs: int = 400, fast: bool = False):
     node_counts = [1, 2, 3, 4, 5] if not fast else [2, 4]
     for n in node_counts:
         row = {"nodes": n}
-        for mk, tag in ((lambda: Maestro(mp), "maestro"),
-                        (lambda: MaestroNoPreempt(mp), "maestro-np")):
+        for tag in ("maestro", "maestro-np"):
             jobs = get_trace(n_jobs, rate=5.0, batch_ratio=0.6, seed=31)
             cfg = SimConfig(nodes_per_cluster=(n,))
-            r = Simulator(jobs, mk(), cfg).run()
+            r = Simulator(jobs, make_policy(tag, predictor=mp), cfg).run()
             row[tag] = {"slo": round(r.slo_attainment, 3),
                         "intq_ms": round(r.interactive_queue_delay_s * 1e3, 1)}
         rows.append(row)

@@ -2,6 +2,7 @@
 
   python -m benchmarks.run              # full pass (tens of minutes)
   python -m benchmarks.run --fast       # reduced sizes (CI / smoke)
+  python -m benchmarks.run --smoke      # tiny sizes, subset policies (CI)
   python -m benchmarks.run --only table5_memory fig10_activation
 """
 from __future__ import annotations
@@ -12,41 +13,52 @@ import traceback
 
 BENCHES = {}
 
+# CI smoke runs one sim policy and one live-gateway policy end-to-end so the
+# benchmark entry points can't silently rot
+SMOKE_POLICIES = ("fcfs", "maestro")
 
-def _register():
+
+def _register(mode: str) -> None:
     from benchmarks import (activation, colocation, fitness, gateway, kernels,
                             memory, prediction, preemption, scheduling)
+    fast = mode != "full"
+    smoke = mode == "smoke"
     BENCHES.update({
-        "gateway": lambda fast: gateway.main(
-            n_jobs=20 if fast else 24, fast=fast),
-        "table3_6_7_prediction": lambda fast: prediction.main(
+        "gateway": lambda: gateway.main(
+            n_jobs={"full": 240, "fast": 24, "smoke": 5}[mode], fast=fast,
+            policies=SMOKE_POLICIES if smoke else None),
+        "table3_6_7_prediction": lambda: prediction.main(
             n_jobs=800 if fast else 2500),
-        "fig7_scheduling": lambda fast: scheduling.main(
-            n_jobs=250 if fast else 600, fast=fast),
-        "table2_preemption": lambda fast: preemption.main(
+        "fig7_scheduling": lambda: scheduling.main(
+            n_jobs={"full": 600, "fast": 250, "smoke": 250}[mode], fast=fast,
+            policies=SMOKE_POLICIES if smoke else None),
+        "table2_preemption": lambda: preemption.main(
             n_jobs=200 if fast else 400, fast=fast),
-        "table4_colocation": lambda fast: colocation.main(fast=fast),
-        "table5_memory": lambda fast: memory.main(fast=fast),
-        "table8_fitness": lambda fast: fitness.main(
+        "table4_colocation": lambda: colocation.main(fast=fast),
+        "table5_memory": lambda: memory.main(fast=fast),
+        "table8_fitness": lambda: fitness.main(
             n_jobs=250 if fast else 500, fast=fast),
-        "fig10_activation": lambda fast: activation.main(fast=fast),
-        "kernels": lambda fast: kernels.main(fast=fast),
+        "fig10_activation": lambda: activation.main(fast=fast),
+        "kernels": lambda: kernels.main(fast=fast),
     })
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes + policy subset (CI entry-point check)")
     ap.add_argument("--only", nargs="*", default=None)
     args = ap.parse_args()
-    _register()
+    mode = "smoke" if args.smoke else "fast" if args.fast else "full"
+    _register(mode)
     names = args.only or list(BENCHES)
     failures = []
     t_all = time.time()
     for name in names:
         t0 = time.time()
         try:
-            payload = BENCHES[name](args.fast)
+            payload = BENCHES[name]()
             if payload is not None:
                 # machine-readable perf record (e.g. BENCH_gateway.json) so
                 # the trajectory is trackable across PRs

@@ -1,17 +1,21 @@
 """Fig. 7: SLO attainment / mean latency / interactive queueing delay across
-arrival rates and batch ratios, FCFS vs EDF vs Maestro (vs Oracle-SRTF)."""
+arrival rates and batch ratios, for EVERY policy in the unified registry
+(fcfs / least-loaded / edf / oracle-srtf / maestro / maestro-np /
+baseline-lb / binpack / maestro-aff) on the trace-driven simulator."""
 from __future__ import annotations
 
-import numpy as np
+from typing import Optional, Sequence
 
 from benchmarks.common import banner, get_predictor, get_trace, save_result
-from repro.sim.policies import EDF, FCFS, Maestro, OracleSRTF
+from repro.core.sched.policies import make_policy, registered_policies
 from repro.sim.simulator import SimConfig, Simulator
 
 
-def main(n_jobs: int = 600, fast: bool = False):
+def main(n_jobs: int = 600, fast: bool = False,
+         policies: Optional[Sequence[str]] = None):
     banner("Fig. 7 — scheduling across arrival rates x batch ratios")
-    mp = get_predictor(fast=fast)
+    names = tuple(policies) if policies else registered_policies()
+    mp = get_predictor(n_jobs=800 if fast else 2500, fast=fast)
     rates = [0.4, 1.0, 2.0] if not fast else [2.0]
     ratios = [0.2, 0.5, 0.8] if not fast else [0.8]
     cfg = SimConfig(nodes_per_cluster=(2, 2, 1))
@@ -19,11 +23,12 @@ def main(n_jobs: int = 600, fast: bool = False):
     for rate in rates:
         for ratio in ratios:
             row = {"rate": rate, "batch_ratio": ratio}
-            for mk in (lambda: FCFS(), lambda: EDF(),
-                       lambda: Maestro(mp), lambda: OracleSRTF()):
+            for name in names:
                 jobs = get_trace(n_jobs, rate=rate, batch_ratio=ratio,
                                  seed=21)
-                r = Simulator(jobs, mk(), cfg).run()
+                r = Simulator(jobs, make_policy(name, predictor=mp),
+                              cfg).run()
+                assert r.finished_jobs > 0, f"{name}: no jobs finished"
                 row[r.policy] = {
                     "slo": round(r.slo_attainment, 3),
                     "lat": round(r.mean_latency_s, 1),
@@ -34,16 +39,23 @@ def main(n_jobs: int = 600, fast: bool = False):
                 for k, v in row.items() if isinstance(v, dict)))
     # headline check: high-contention corner
     hi = table[-1]
-    gain = (hi["maestro"]["slo"] - hi["edf"]["slo"]) * 100
-    intq_cut = 1 - hi["maestro"]["intq"] / max(hi["edf"]["intq"], 1e-9)
-    print(f"high-contention SLO gain over EDF: {gain:+.1f}pp (paper: +23.6pp)")
-    print(f"interactive queueing delay cut vs EDF: {intq_cut*100:.1f}% "
-          f"(paper: 84.8%)")
-    assert hi["maestro"]["slo"] >= hi["fcfs"]["slo"]
-    save_result("fig7_scheduling", {"table": table,
-                                    "slo_gain_vs_edf_pp": gain,
-                                    "intq_cut_vs_edf_pct": intq_cut * 100})
-    return table
+    payload = {"table": table, "policies": list(names)}
+    if "maestro" in hi and "fcfs" in hi:
+        # headline claim: maestro cuts interactive queueing delay under
+        # contention without giving up SLO attainment (noise tolerance)
+        assert hi["maestro"]["intq"] <= hi["fcfs"]["intq"], hi
+        assert hi["maestro"]["slo"] >= hi["fcfs"]["slo"] - 0.03, hi
+    if "maestro" in hi and "edf" in hi:
+        gain = (hi["maestro"]["slo"] - hi["edf"]["slo"]) * 100
+        intq_cut = 1 - hi["maestro"]["intq"] / max(hi["edf"]["intq"], 1e-9)
+        print(f"high-contention SLO gain over EDF: {gain:+.1f}pp "
+              f"(paper: +23.6pp)")
+        print(f"interactive queueing delay cut vs EDF: {intq_cut*100:.1f}% "
+              f"(paper: 84.8%)")
+        payload["slo_gain_vs_edf_pp"] = gain
+        payload["intq_cut_vs_edf_pct"] = intq_cut * 100
+    save_result("fig7_scheduling", payload)
+    return payload
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Cross-cluster scheduling playground: replay a Table-I-style trace through
-the discrete-event simulator under any policy and print the Fig.7-style
-metrics.
+the discrete-event simulator under ANY registered policy and print the
+Fig.7-style metrics.
 
   PYTHONPATH=src python examples/cross_cluster_sim.py --policy maestro \
       --rate 2.0 --batch-ratio 0.8 --jobs 400
@@ -11,9 +11,9 @@ import numpy as np
 
 from repro.core.predictor import MaestroPred, PredictorConfig
 from repro.core.predictor.gbdt import GBDTConfig
+from repro.core.sched.policies import (POLICIES, make_policy,
+                                       registered_policies)
 from repro.data.tracegen import generate_trace, stratified_temporal_split
-from repro.sim.policies import (EDF, FCFS, BaselineLB, BinPackOnly, Maestro,
-                                MaestroNoPreempt, OracleSRTF)
 from repro.sim.simulator import SimConfig, Simulator
 
 
@@ -32,25 +32,16 @@ def train_predictor(n_jobs=400):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--policy", default="maestro",
-                    choices=["fcfs", "edf", "oracle-srtf", "maestro",
-                             "maestro-np", "baseline-lb", "binpack", "all"])
+                    choices=list(registered_policies()) + ["all"])
     ap.add_argument("--rate", type=float, default=2.0)
     ap.add_argument("--batch-ratio", type=float, default=0.8)
     ap.add_argument("--jobs", type=int, default=400)
     args = ap.parse_args()
 
+    names = (list(registered_policies()) if args.policy == "all"
+             else [args.policy])
     mp = None
-    mk = {
-        "fcfs": lambda: FCFS(),
-        "edf": lambda: EDF(),
-        "oracle-srtf": lambda: OracleSRTF(),
-        "maestro": lambda: Maestro(mp),
-        "maestro-np": lambda: MaestroNoPreempt(mp),
-        "baseline-lb": lambda: BaselineLB(mp),
-        "binpack": lambda: BinPackOnly(mp),
-    }
-    names = list(mk) if args.policy == "all" else [args.policy]
-    if any(n not in ("fcfs", "edf", "oracle-srtf") for n in names):
+    if any(POLICIES[n].needs_predictor for n in names):
         print("[sim] training predictor ...")
         mp = train_predictor()
     print(f"[sim] {args.jobs} jobs @ {args.rate}/s, "
@@ -58,7 +49,8 @@ def main():
     for name in names:
         jobs = generate_trace(args.jobs, rate=args.rate,
                               batch_ratio=args.batch_ratio, seed=13)
-        r = Simulator(jobs, mk[name](), SimConfig()).run()
+        r = Simulator(jobs, make_policy(name, predictor=mp),
+                      SimConfig()).run()
         print(f"  {r.policy:12s} slo={r.slo_attainment:5.1%} "
               f"mean_lat={r.mean_latency_s:7.1f}s "
               f"interactive_queue={r.interactive_queue_delay_s:6.2f}s "

@@ -33,6 +33,9 @@ def train_predictor(train_jobs: int = 300, seed: int = 9) -> MaestroPred:
 
 def main(n_jobs: int = 6, train_jobs: int = 300, policy: str = "maestro",
          seed: int = 7):
+    """``policy`` is any name from the unified registry
+    (``repro.core.sched.policies``): the same objects drive the trace
+    simulator and this live gateway."""
     print(f"[serve] training the agent-aware cost predictor "
           f"({train_jobs} recorded jobs) ...")
     pred = train_predictor(train_jobs)

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.predictor.features import StageObservation
+from repro.core.topology import DEFAULT_RTT
 from repro.data.tracegen import JobRecord
 from repro.models import build_model
 from repro.serving.node_runtime import NodeRuntime
@@ -23,11 +24,6 @@ from repro.serving.node_runtime import NodeRuntime
 # default live zoo: three distinct families colocated per node (attention,
 # code-tuned attention, SSM) — the Table-IV colocation regime in miniature
 DEFAULT_ZOO = ("qwen3-8b", "starcoder2-15b", "mamba2-2.7b")
-
-# two same-region clusters + one remote (Fig. 4's RTT regime, seconds)
-DEFAULT_RTT = np.array([[0.0005, 0.003, 0.060],
-                        [0.003, 0.0005, 0.080],
-                        [0.060, 0.080, 0.0005]])
 
 
 @dataclasses.dataclass

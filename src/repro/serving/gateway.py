@@ -4,35 +4,44 @@
 simulated-RTT clusters and serves multi-stage workflow DAGs end-to-end
 through the paper's full pipeline:
 
-  global workflow-aware SRTF queue (Eq. 7-8) with boundary preemption
-    -> fitness routing over live NodeSignals (Eq. 5-6, Alg. 3)
-    -> rho-margin admission against each node's MemoryAccountant (§III.C)
+  global priority queue ordered by the POLICY (unified registry in
+  ``repro.core.sched.policies`` — the same objects that drive the trace
+  simulator) with boundary preemption
+    -> policy routing over live NodeSignals (Eq. 5-6, Alg. 3)
+    -> rho-margin admission against each node's MemoryAccountant (§III.C),
+       eviction-aware: Alg. 2 degradation plans enter feasibility AND are
+       executed (``NodeRuntime.make_room``) at submit time
     -> real continuous-batching execution on the node engines
-    -> post-execution calibration back into rho + the WorkflowProfileStore.
+    -> post-execution calibration back through ``policy.on_finish``.
+
+The gateway is the live :class:`~repro.core.sched.substrate.Substrate`
+implementation: it owns the queue mechanics, the virtual clock and the
+telemetry, while every scheduling decision (queue order, reservation,
+routing, preemption) is delegated to the policy. Any registered policy name
+(fcfs / least-loaded / edf / oracle-srtf / maestro / maestro-np /
+baseline-lb / binpack / maestro-aff) runs on real engines.
 
 The event loop is STEP-DRIVEN: one ``step()`` advances a virtual clock by
 ``tick_s`` and runs one iteration of every busy engine. Network RTT and
 cold-start activation enter as deterministic virtual delays (a dispatched
 stage reaches its engine only after rtt + T_act of virtual time), so runs
 are reproducible and unit-testable — no wall-clock sleeps anywhere.
-
-Pluggable policies (fcfs / least-loaded / maestro) reproduce the simulator's
-controlled comparison on real engines: all policies share the fleet, the
-admission substrate and the arrival trace; they differ only in queue order,
-routing and preemption.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import heapq
 import time
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.control_loop import MaestroController, model_name
-from repro.core.sched.fitness import NodeSignal, StageRequest
-from repro.core.sched.srtf import QueuedStage, SRTFQueue, state_key
+from repro.core.control_loop import model_name
+from repro.core.sched.fitness import NodeSignal
+from repro.core.sched.policies import SchedPolicy, make_policy
+from repro.core.sched.substrate import SchedStage
+from repro.core.topology import validate_rtt
 from repro.serving.cluster import LiveJob, LiveStage
 from repro.serving.engine import Request
 from repro.serving.node_runtime import NodeRuntime
@@ -61,255 +70,30 @@ class _InFlight:
     node_id: int
     model: str
     req: Request
+    r_need: float                     # reserved KV bytes (make_room target)
     submit_at: float                  # virtual time the engine may see it
     submitted: bool = False
 
 
-# ---------------------------------------------------------------------------
-# Policies
-# ---------------------------------------------------------------------------
-
-class GatewayPolicy:
-    """Queue order + routing. Bound to one gateway instance."""
-    name = "base"
-    preemptive = False
-
-    def bind(self, gw: "ClusterGateway") -> None:
-        self.gw = gw
-
-    def push(self, stage: LiveStage, now: float) -> None:
-        raise NotImplementedError
-
-    def peek(self, now: float) -> Optional[LiveStage]:
-        raise NotImplementedError
-
-    def pop(self, now: float) -> Optional[LiveStage]:
-        raise NotImplementedError
-
-    def discard(self, stage: LiveStage) -> None:
-        raise NotImplementedError
-
-    def __len__(self) -> int:
-        raise NotImplementedError
-
-    def refresh(self, now: float) -> None:
-        pass
-
-    def plan(self, stage: LiveStage, now: float
-             ) -> Tuple[Optional[int], Dict[str, float]]:
-        """Returns (node_id or None, meta: r_need / l_hat / t_act / rtt)."""
-        raise NotImplementedError
-
-    def on_finish(self, stage: LiveStage, out_len: int, now: float) -> None:
-        pass
-
-    # -------------------------------------------------- shared helpers
-    def _static_r_need(self, stage: LiveStage) -> float:
-        prof = self.gw.profiles[self.gw.model_of(stage)]
-        return prof.r_kv(len(stage.tokens),
-                         self.gw.cfg.static_reserve_tokens)
-
-    def _feasible(self, nid: int, r_need: float) -> bool:
-        gw = self.gw
-        return (gw.node_load[nid] < gw.inflight_cap[nid]
-                and gw.fleet[nid].acc.can_admit(r_need))
-
-
-class FCFSPolicy(GatewayPolicy):
-    """Global FIFO + first feasible node; static KV reservation."""
-    name = "fcfs"
-
-    def __init__(self) -> None:
-        self.q: Deque[LiveStage] = collections.deque()
-
-    def push(self, stage, now):
-        self.q.append(stage)
-
-    def peek(self, now):
-        return self.q[0] if self.q else None
-
-    def pop(self, now):
-        return self.q.popleft() if self.q else None
-
-    def discard(self, stage):
-        try:
-            self.q.remove(stage)
-        except ValueError:
-            pass
-
-    def __len__(self):
-        return len(self.q)
-
-    def plan(self, stage, now):
-        r_need = self._static_r_need(stage)
-        model = self.gw.model_of(stage)
-        for nid in sorted(self.gw.fleet):
-            if self._feasible(nid, r_need):
-                node = self.gw.fleet[nid]
-                return nid, {"r_need": r_need, "l_hat": None,
-                             "t_act": node.t_act(model),
-                             "rtt": self.gw.rtt(stage, nid)}
-        return None, {"r_need": r_need}
-
-
-class LeastLoadedPolicy(FCFSPolicy):
-    """Global FIFO + least-inflight feasible node."""
-    name = "least-loaded"
-
-    def plan(self, stage, now):
-        r_need = self._static_r_need(stage)
-        model = self.gw.model_of(stage)
-        cands = [nid for nid in self.gw.fleet
-                 if self._feasible(nid, r_need)]
-        if not cands:
-            return None, {"r_need": r_need}
-        nid = min(cands, key=lambda n: (self.gw.node_load[n], n))
-        return nid, {"r_need": r_need, "l_hat": None,
-                     "t_act": self.gw.fleet[nid].t_act(model),
-                     "rtt": self.gw.rtt(stage, nid)}
-
-
-class MaestroPolicy(GatewayPolicy):
-    """Workflow-aware SRTF + fitness routing + rho-margin admission +
-    boundary preemption — the full hierarchy on live engines."""
-    name = "maestro"
-    preemptive = True
-
-    def __init__(self, ctl: MaestroController) -> None:
-        self.ctl = ctl
-        self.entries: Dict[int, QueuedStage] = {}   # stage_id -> queue entry
-        self.preds: Dict[int, Dict[str, float]] = {}
-
-    # ------------------------------------------------------------ prediction
-    def _pred(self, stage: LiveStage) -> Dict[str, float]:
-        p = self.preds.get(stage.stage_id)
-        if p is None:
-            l_hat, p_tool, r_kv_hat = self.ctl.predict_stage(stage.obs)
-            p = {"l_hat": l_hat, "p_tool": p_tool, "r_kv_hat": r_kv_hat}
-            self.preds[stage.stage_id] = p
-        return p
-
-    def _t_exec_v(self, stage: LiveStage, l_hat: float) -> float:
-        """Predicted stage duration in VIRTUAL seconds (prefill tick +
-        one decode tick per predicted token, capped by the decode budget)."""
-        return self.gw.cfg.tick_s * (1.0 + min(l_hat, stage.max_new))
-
-    # ------------------------------------------------------------ queue ops
-    def push(self, stage, now):
-        p = self._pred(stage)
-        key = state_key(stage.obs.app, stage.obs.role,
-                        stage.obs.invocation_idx, p["p_tool"])
-        qs = QueuedStage(stage_id=stage.stage_id, job_id=stage.job_id,
-                         interactive=stage.interactive,
-                         t_exec=self._t_exec_v(stage, p["l_hat"]),
-                         t_future=self.ctl.wf_profiles.future_median(key),
-                         enqueue_time=now)
-        self.entries[stage.stage_id] = qs
-        self.ctl.queue.push(qs, now)
-
-    def peek(self, now):
-        qs = self.ctl.queue.peek()
-        return None if qs is None else self.gw.stage_by_id[qs.stage_id]
-
-    def pop(self, now):
-        qs = self.ctl.queue.pop(now)
-        if qs is None:
-            return None
-        self.entries.pop(qs.stage_id, None)
-        return self.gw.stage_by_id[qs.stage_id]
-
-    def discard(self, stage):
-        qs = self.entries.pop(stage.stage_id, None)
-        if qs is not None:
-            self.ctl.queue.remove(qs)
-
-    def __len__(self):
-        return len(self.ctl.queue)
-
-    def refresh(self, now):
-        self.ctl.queue.refresh(now)
-
-    # --------------------------------------------------------------- routing
-    def plan(self, stage, now):
-        gw = self.gw
-        p = self._pred(stage)
-        r_need = self.ctl.rho.r_need(p["r_kv_hat"])
-        model = gw.model_of(stage)
-        prof = gw.profiles[model]
-        req = StageRequest(
-            stage_id=stage.stage_id, model=model, r_need=r_need,
-            interactive=stage.interactive,
-            src_cluster=stage.obs.src_cluster,
-            t_exec=prof.t_exec(stage.obs.prompt_len, p["l_hat"]))
-        signals = [gw.signal(nid) for nid in gw.fleet
-                   if gw.node_load[nid] < gw.inflight_cap[nid]]
-        sel = self.ctl.router.select(
-            req, signals,
-            t_act_of=lambda sig, m: gw.fleet[sig.node_id].t_act(m),
-            c_deg_of=lambda sig, rq: None)   # no live degradation plans yet
-        if sel is None:
-            return None, {"r_need": r_need, "l_hat": p["l_hat"]}
-        nid = sel[0].node_id
-        return nid, {"r_need": r_need, "l_hat": p["l_hat"],
-                     "t_act": gw.fleet[nid].t_act(model),
-                     "rtt": gw.rtt(stage, nid), "score": sel[1]}
-
-    # ----------------------------------------------------------- calibration
-    def on_finish(self, stage, out_len, now):
-        p = self._pred(stage)
-        prof = self.gw.profiles[self.gw.model_of(stage)]
-        # Calibrate on the SAME basis the prediction used (the uncapped
-        # trace-scale lengths): the realized output, mapped back through the
-        # live decode budget, against L_hat. Comparing live capped bytes to
-        # the uncapped R_kv_hat would make the error identically zero and
-        # pin rho to its floor.
-        nominal = stage.nominal_len or stage.max_new
-        actual_len = nominal * out_len / max(stage.max_new, 1)
-        actual_kv = prof.r_kv(stage.obs.prompt_len, actual_len)
-        self.ctl.rho.observe(actual_kv, max(p["r_kv_hat"], 1.0))
-        key = state_key(stage.obs.app, stage.obs.role,
-                        stage.obs.invocation_idx, p["p_tool"])
-        self.ctl.wf_profiles.record(key, self.gw.job_remaining_v(stage))
-
-
-# ---------------------------------------------------------------------------
-# The gateway
-# ---------------------------------------------------------------------------
-
-def make_policy(name: str, ctl: Optional[MaestroController]) -> GatewayPolicy:
-    if name == "fcfs":
-        return FCFSPolicy()
-    if name == "least-loaded":
-        return LeastLoadedPolicy()
-    if name == "maestro":
-        if ctl is None:
-            raise ValueError("maestro policy needs a MaestroController "
-                             "(pass predictor= to ClusterGateway)")
-        return MaestroPolicy(ctl)
-    raise ValueError(f"unknown gateway policy {name!r}")
-
-
 class ClusterGateway:
+    """The LIVE-plane Substrate: virtual tick clock, real engine execution."""
+
     def __init__(self, fleet: Sequence[NodeRuntime], rtt_s: np.ndarray,
-                 predictor=None, policy: str = "maestro",
+                 predictor=None, policy: Union[str, SchedPolicy] = "maestro",
                  cfg: Optional[GatewayConfig] = None,
                  telemetry: Optional[Telemetry] = None):
         self.cfg = cfg or GatewayConfig()
         self.fleet: Dict[int, NodeRuntime] = {n.node_id: n for n in fleet}
-        self.rtt_s = np.asarray(rtt_s, float)
+        self.rtt_s = validate_rtt(rtt_s)
         self.profiles = {name: p
                          for name, p in next(iter(self.fleet.values()))
                          .profiles.items()}
         self.telemetry = telemetry or Telemetry()
-        self.ctl: Optional[MaestroController] = None
-        if predictor is not None:
-            queue = SRTFQueue(
-                preempt_gain_s=self.cfg.preempt_gain_ticks * self.cfg.tick_s,
-                cooldown_s=self.cfg.preempt_cooldown_ticks * self.cfg.tick_s)
-            self.ctl = MaestroController(predictor, self.profiles,
-                                         self.rtt_s, queue=queue)
-        self.policy = make_policy(policy, self.ctl)
-        self.policy.bind(self)
+        self.preempt_gain_s = self.cfg.preempt_gain_ticks * self.cfg.tick_s
+        self.preempt_cooldown_s = (self.cfg.preempt_cooldown_ticks
+                                   * self.cfg.tick_s)
+        self.policy = (make_policy(policy, predictor=predictor)
+                       if isinstance(policy, str) else policy)
 
         # clock + workload state
         self.tick = 0
@@ -329,12 +113,32 @@ class ClusterGateway:
                   or self.fleet[nid].max_slots)
             for nid in self.fleet}
         self.qd_ewma: Dict[int, float] = {nid: 0.0 for nid in self.fleet}
+        # KV reserved by dispatched-but-not-yet-submitted stages: charged at
+        # dispatch so admission cannot hand the same headroom to two stages
+        # during the rtt + t_act transit window, released when the engine's
+        # own accounting takes over at submit
+        self.pending_resv: Dict[int, float] = {nid: 0.0 for nid in self.fleet}
         self._rejects: Dict[int, int] = collections.defaultdict(int)
+        self._views: Dict[int, SchedStage] = {}
+
+        # the global queue: (priority, seq, stage_id) heap + live-id set;
+        # priorities come from policy.priority and are refreshed on the
+        # aging cadence (stale in between, exactly like the sim's heap)
+        self._q: List[Tuple[float, int, int]] = []
+        self._queued: set = set()
+        self._qseq = 0
+        self.policy.setup(self)
 
     # ----------------------------------------------------------------- views
     @property
     def now(self) -> float:
         return self.tick * self.cfg.tick_s
+
+    @property
+    def ctl(self):
+        """The policy's MaestroController when it has one (calibration
+        introspection for examples/benchmarks); None for baselines."""
+        return getattr(self.policy, "ctl", None)
 
     def model_of(self, stage: LiveStage) -> str:
         return model_name(stage.obs, self.profiles)
@@ -343,12 +147,68 @@ class ClusterGateway:
         src = stage.obs.src_cluster % self.rtt_s.shape[0]
         return float(self.rtt_s[src, self.fleet[nid].cluster_id])
 
+    def view(self, stage: LiveStage) -> SchedStage:
+        v = self._views.get(stage.stage_id)
+        if v is None:
+            job = self.jobs[stage.job_id]
+            v = SchedStage(stage_id=stage.stage_id, job_id=stage.job_id,
+                           model=self.model_of(stage),
+                           interactive=stage.interactive,
+                           prompt_len=stage.obs.prompt_len,
+                           arrival_s=job.arrival_s,
+                           deadline_s=job.deadline_s, obs=stage.obs)
+            self._views[stage.stage_id] = v
+        return v
+
+    # --------------------------------------------------- Substrate protocol
+    def node_ids(self) -> Sequence[int]:
+        return sorted(self.fleet)
+
     def signal(self, nid: int) -> NodeSignal:
         """Live NodeSignal with the gateway's virtual queue-delay EWMA (the
         runtime's own queue statistic is engine-local and not in seconds)."""
         sig = self.fleet[nid].signal()
         sig.queue_delay_s = self.qd_ewma[nid]
         return sig
+
+    def load(self, nid: int) -> int:
+        return self.node_load[nid]
+
+    def can_admit(self, nid: int, r_need: float,
+                  model: Optional[str] = None) -> bool:
+        return (self.node_load[nid] < self.inflight_cap[nid]
+                and self.fleet[nid].can_admit(
+                    r_need + self.pending_resv[nid], model))
+
+    def t_act(self, nid: int, model: str) -> float:
+        return self.fleet[nid].t_act(model)
+
+    def degradation_cost(self, nid: int, r_need: float) -> Optional[float]:
+        return self.fleet[nid].degradation_cost(r_need)
+
+    def known_stages(self) -> List[SchedStage]:
+        return []                     # stages arrive online
+
+    def static_reservation(self, stage: SchedStage) -> float:
+        prof = self.profiles[stage.model]
+        return prof.r_kv(len(self.stage_by_id[stage.stage_id].tokens),
+                         self.cfg.static_reserve_tokens)
+
+    def t_exec_est(self, stage: SchedStage,
+                   l_hat: Optional[float]) -> float:
+        """Stage duration in VIRTUAL seconds (prefill tick + one decode tick
+        per predicted token, capped by the decode budget)."""
+        ls = self.stage_by_id[stage.stage_id]
+        l_hat = ls.max_new if l_hat is None else min(l_hat, ls.max_new)
+        return self.cfg.tick_s * (1.0 + l_hat)
+
+    def true_remaining_s(self, stage: SchedStage) -> float:
+        job = self.jobs[stage.job_id]
+        return sum(self.cfg.tick_s * (1.0 + s.max_new) for s in job.stages
+                   if s.stage_id not in self.done)
+
+    def ready_since(self, stage_id: int) -> float:
+        return self.ready_t.get(stage_id, float("inf"))
 
     def job_remaining_v(self, stage: LiveStage) -> float:
         """Remaining virtual execution time of the stage's job, AFTER this
@@ -357,6 +217,40 @@ class ClusterGateway:
         return sum(self.cfg.tick_s * (1.0 + s.max_new) for s in job.stages
                    if s.stage_id not in self.done
                    and s.stage_id != stage.stage_id)
+
+    # -------------------------------------------------------- global queue
+    def _q_push(self, stage: LiveStage, now: float) -> None:
+        self._qseq += 1
+        pri = self.policy.priority(self, self.view(stage), now)
+        heapq.heappush(self._q, (pri, self._qseq, stage.stage_id))
+        self._queued.add(stage.stage_id)
+
+    def _q_peek(self, now: float) -> Optional[LiveStage]:
+        while self._q:
+            _, _, sid = self._q[0]
+            if sid not in self._queued:
+                heapq.heappop(self._q)     # stale entry
+                continue
+            return self.stage_by_id[sid]
+        return None
+
+    def _q_pop(self, now: float) -> Optional[LiveStage]:
+        stage = self._q_peek(now)
+        if stage is not None:
+            heapq.heappop(self._q)
+            self._queued.discard(stage.stage_id)
+        return stage
+
+    def _q_discard(self, stage_id: int) -> None:
+        self._queued.discard(stage_id)
+
+    def _q_refresh(self, now: float) -> None:
+        """Recompute (aged) priorities — heap entries are stale otherwise."""
+        live = list(self._queued)
+        self._q.clear()
+        self._queued.clear()
+        for sid in live:
+            self._q_push(self.stage_by_id[sid], now)
 
     # ------------------------------------------------------------- workload
     def submit_jobs(self, jobs: Sequence[LiveJob]) -> None:
@@ -409,9 +303,9 @@ class ClusterGateway:
             for s in self.jobs[jid].stages:
                 if not s.deps:
                     self._mark_ready(s, now)
-        # 2) SRTF aging refresh
+        # 2) aging refresh of the global queue
         if self.tick % self.cfg.refresh_every == 0:
-            self.policy.refresh(now)
+            self._q_refresh(now)
         # 3) global-queue dispatch (routing + admission + preemption)
         self._dispatch(now)
         # 4) stages whose rtt + activation virtual delay elapsed hit engines
@@ -436,17 +330,19 @@ class ClusterGateway:
                                   stage.interactive)
         ev.ready_t = now
         ev.model = self.model_of(stage)
-        self.policy.push(stage, now)
+        self._q_push(stage, now)
 
     def _dispatch(self, now: float) -> None:
-        while len(self.policy):
-            stage = self.policy.peek(now)
+        while self._queued:
+            stage = self._q_peek(now)
             if stage is None:
                 break
             if stage.job_id in self.dropped or stage.stage_id in self.done:
-                self.policy.pop(now)
+                self._q_pop(now)
                 continue
-            nid, meta = self.policy.plan(stage, now)
+            view = self.view(stage)
+            r_need = self.policy.reservation(self, view)
+            nid = self.policy.route(self, view, r_need)
             if nid is None:
                 # memory infeasibility (a node had a free slot yet could not
                 # admit) is an ADMISSION rejection; all-slots-busy is plain
@@ -458,33 +354,35 @@ class ClusterGateway:
                     self.telemetry.event(stage.stage_id, stage.job_id,
                                          stage.interactive).rejections += 1
                     self._rejects[stage.stage_id] += 1
-                if (self.policy.preemptive and stage.interactive
+                if (self.policy.requeue_at_boundary and stage.interactive
                         and self._try_preempt(stage, now)):
                     continue                   # retry the head post-eviction
                 if self._rejects[stage.stage_id] > self.cfg.reject_limit:
                     self._drop_job(stage.job_id, now)
                     continue
                 break                          # head-of-line block
-            self.policy.pop(now)
-            self._dispatch_to(stage, nid, meta, now)
+            self._q_pop(now)
+            self._dispatch_to(stage, nid, r_need, now)
 
-    def _dispatch_to(self, stage: LiveStage, nid: int,
-                     meta: Dict[str, float], now: float) -> None:
+    def _dispatch_to(self, stage: LiveStage, nid: int, r_need: float,
+                     now: float) -> None:
         node = self.fleet[nid]
-        model = self.model_of(stage)
-        rtt = meta.get("rtt", self.rtt(stage, nid))
-        t_act = meta.get("t_act", node.t_act(model))
+        view = self.view(stage)
+        model = view.model
+        rtt = self.rtt(stage, nid)
+        t_act = node.t_act(model)
         if t_act > COLD_START_THRESHOLD_S:
             self.telemetry.cold_starts += 1
-        l_hat = meta.get("l_hat")
+        l_hat = self.policy.predicted_len(self, view)
         req = Request(req_id=stage.stage_id, tokens=list(stage.tokens),
                       max_new=stage.max_new,
                       pred_len=(None if l_hat is None
                                 else float(min(l_hat, stage.max_new))))
         self.inflight[stage.stage_id] = _InFlight(
-            stage=stage, node_id=nid, model=model, req=req,
+            stage=stage, node_id=nid, model=model, req=req, r_need=r_need,
             submit_at=now + rtt + t_act)
         self.node_load[nid] += 1
+        self.pending_resv[nid] += r_need
         wait = max(0.0, now - self.ready_t.get(stage.stage_id, now))
         self.qd_ewma[nid] = 0.8 * self.qd_ewma[nid] + 0.2 * (wait + t_act)
         ev = self.telemetry.event(stage.stage_id, stage.job_id,
@@ -497,9 +395,14 @@ class ClusterGateway:
             if rec.submitted or rec.submit_at > now + 1e-9:
                 continue
             node = self.fleet[rec.node_id]
+            if not node.acc.can_admit(rec.r_need):
+                # Alg. 2 cheap prefix (levels 1-2) executed live: sleep idle
+                # engines / drop warm contexts so the reservation fits
+                node.make_room(rec.r_need)
             t0 = time.perf_counter()
             node.submit(rec.model, rec.req)   # real activation on demand
             rec.submitted = True
+            self.pending_resv[rec.node_id] -= rec.r_need
             ev = self.telemetry.event(rec.stage.stage_id, rec.stage.job_id,
                                       rec.stage.interactive)
             ev.start_t = now
@@ -516,7 +419,17 @@ class ClusterGateway:
         ev = self.telemetry.event(stage.stage_id, stage.job_id,
                                   stage.interactive)
         ev.finish_t, ev.out_len = now, len(req.out)
-        self.policy.on_finish(stage, len(req.out), now)
+        # Calibrate on the SAME basis the prediction used (the uncapped
+        # trace-scale lengths): the realized output, mapped back through the
+        # live decode budget, against L_hat. Comparing live capped bytes to
+        # the uncapped R_kv_hat would make the error identically zero and
+        # pin rho to its floor.
+        prof = self.profiles[rec.model]
+        nominal = stage.nominal_len or stage.max_new
+        actual_len = nominal * len(req.out) / max(stage.max_new, 1)
+        actual_kv = prof.r_kv(stage.obs.prompt_len, actual_len)
+        self.policy.on_finish(self, self.view(stage), actual_kv,
+                              self.job_remaining_v(stage))
         job = self.jobs[stage.job_id]
         self.job_done_stages[stage.job_id] += 1
         if self.job_done_stages[stage.job_id] == len(job.stages):
@@ -532,29 +445,24 @@ class ClusterGateway:
     # ---------------------------------------------------------- preemption
     def _try_preempt(self, stage: LiveStage, now: float) -> bool:
         """Boundary preemption: evict a batch stage between engine steps so
-        an infeasible interactive head can place. Guarded by the SRTF
-        queue's hysteresis + cooldown; the victim restarts from its prompt."""
-        assert self.ctl is not None
-        pol = self.policy
-        cand_qs = QueuedStage(
-            stage_id=stage.stage_id, job_id=stage.job_id, interactive=True,
-            t_exec=self.cfg.tick_s * (1.0 + stage.max_new), t_future=0.0)
+        an infeasible interactive head can place. The policy decides
+        (hysteresis + cooldown); the victim restarts from its prompt."""
+        cand = self.view(stage)
         victims = sorted(
             (r for r in self.inflight.values() if not r.stage.interactive),
             key=lambda r: -(r.stage.max_new - len(r.req.out)))
         for rec in victims:
             remaining_v = self.cfg.tick_s * max(
                 1.0, 1.0 + rec.stage.max_new - len(rec.req.out))
-            run_qs = QueuedStage(
-                stage_id=rec.stage.stage_id, job_id=rec.stage.job_id,
-                interactive=False, t_exec=remaining_v, t_future=0.0)
-            if not self.ctl.queue.should_preempt(run_qs, cand_qs,
-                                                 remaining_v, now):
+            if not self.policy.should_preempt(self, self.view(rec.stage),
+                                              remaining_v, cand, now):
                 continue
             if rec.submitted:
                 if self.fleet[rec.node_id].preempt(rec.model,
                                                    rec.req.req_id) is None:
                     continue   # finished this very tick; nothing to evict
+            else:
+                self.pending_resv[rec.node_id] -= rec.r_need
             self.inflight.pop(rec.stage.stage_id, None)
             self.node_load[rec.node_id] -= 1
             self.telemetry.preemptions += 1
@@ -576,4 +484,4 @@ class ClusterGateway:
         self.telemetry.dropped_jobs += 1
         for s in self.jobs[job_id].stages:
             if s.stage_id not in self.done:
-                self.policy.discard(s)
+                self._q_discard(s.stage_id)

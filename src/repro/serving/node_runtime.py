@@ -17,6 +17,8 @@ import numpy as np
 
 from repro.core.predictor.cost_model import HardwareSpec, ModelProfile
 from repro.core.runtime.accounting import MemoryAccountant
+from repro.core.runtime.coordination import (EngineInfo, EngineState,
+                                             plan_degradation)
 from repro.core.runtime.residency import HierarchicalResidency, ModelState
 from repro.core.sched.fitness import NodeSignal
 from repro.models.transformer import Model
@@ -119,6 +121,76 @@ class NodeRuntime:
         """Estimated activation latency (no side effects) — the T_act of
         Eq. 6 that the cross-cluster router consumes."""
         return self.residency.activation_latency(model)
+
+    # ----------------------------------------------- admission (Alg. 2 aware)
+    def _busy_models(self) -> set:
+        return {m for m, e in self.engines.items() if e.active or e.waiting}
+
+    def can_admit(self, r_need: float, model: Optional[str] = None) -> bool:
+        """Eviction-aware KV admission feasibility (mirrors SimNode):
+        everything except in-flight models' weights and contexts can be
+        reclaimed by degradation levels 1-2 before the stage lands."""
+        extra = 0.0
+        if model is not None:
+            if model not in self.acc.weights:
+                extra += self.profiles[model].weight_bytes
+            if model not in self.acc.ctx:
+                extra += self.profiles[model].ctx_bytes
+        if self.acc.can_admit(r_need + extra):
+            return True
+        if model is None:
+            return False
+        active = self._busy_models() | {model}
+        floor = sum(self.profiles[m].weight_bytes + self.profiles[m].ctx_bytes
+                    for m in active)
+        return (floor + self.acc.m_kv + self.acc.m_other + r_need
+                <= self.acc.m_total)
+
+    def degradation_cost(self, r_need: float) -> Optional[float]:
+        """C_deg for admitting r_need via Algorithm 2 (None = impossible) —
+        the live counterpart of SimNode.degradation_cost, built from the
+        real engines' in-flight state."""
+        shortfall = r_need - self.acc.headroom
+        if shortfall <= 0:
+            return 0.0
+        busy = self._busy_models()
+        engines = []
+        for m in self.residency.warm_set():
+            st = self.residency.state[m]
+            eng = self.engines.get(m)
+            kv_tokens = (sum(len(r.tokens) + len(r.out)
+                             for r in eng.active.values()) if eng else 0)
+            prof = self.profiles[m]
+            engines.append(EngineInfo(
+                model=m,
+                state=(EngineState.ACTIVE if m in busy else
+                       EngineState.IDLE if st is ModelState.RUNNING
+                       else EngineState.SLEEPING),
+                weight_bytes=prof.weight_bytes,
+                ctx_bytes=prof.ctx_bytes,
+                kv_bytes=float((eng.alpha if eng else 0) * kv_tokens),
+                kv_tokens=kv_tokens,
+                decode_tok_per_s=1.0 / max(prof.t_decode, 1e-9)))
+        plan = plan_degradation(shortfall, engines,
+                                next(iter(self.profiles.values())).hw)
+        return None if plan is None else plan.c_deg
+
+    def make_room(self, r_need: float) -> None:
+        """Degradation levels 1-2 (Algorithm 2's cheap prefix) on the live
+        node: sleep idle engines, then drop sleeping warm contexts, until
+        r_need fits. In-flight engines are never touched."""
+        busy = self._busy_models()
+        for m in list(self.residency.lru["gpu"]):
+            if self.acc.can_admit(r_need):
+                return
+            if m not in busy and self.residency.state[m] is ModelState.RUNNING:
+                self.sleep(m)                         # level 1
+        for m, st in list(self.residency.state.items()):
+            if self.acc.can_admit(r_need):
+                return
+            if m not in busy and st is ModelState.SLEEPING:
+                self.residency.demote_context(m)      # level 2
+                self.acc.unregister_context(m)
 
     def step(self) -> Dict[str, list]:
         out = {}

@@ -6,6 +6,11 @@ uses the TRUE output length through the same cost model the scheduler's
 predictions use — so prediction error manifests as queueing/admission error
 exactly as in the paper.
 
+The simulator is one of the two :class:`~repro.core.sched.substrate.Substrate`
+implementations (the other is the live ``ClusterGateway``): policies from the
+unified registry (``repro.core.sched.policies``) drive it through the shared
+priority / reservation / route / on_finish surface.
+
 Boundary preemption semantics (§III.D): with ``requeue_at_boundary`` the
 successor of a finished stage re-enters the global queue and contends under
 the policy's order; without it, job continuity keeps the successor on the
@@ -16,21 +21,18 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.predictor.cost_model import (HardwareSpec, ModelProfile,
                                              synthetic_profile)
+from repro.core.sched.policies import SchedPolicy, make_policy
+from repro.core.sched.substrate import SchedStage
+from repro.core.topology import DEFAULT_RTT, validate_rtt
 from repro.data.apps import APPS, APP_ID, MODELS, MODEL_PARAMS_B
 from repro.data.tracegen import JobRecord, StageRecord
 from repro.sim.cluster import SimNode
-from repro.sim.policies import Policy
-
-# Fig. 4-style RTT matrix (seconds): 3 clusters — two same-region, one remote
-DEFAULT_RTT = np.array([[0.0005, 0.003, 0.060],
-                        [0.003, 0.0005, 0.080],
-                        [0.060, 0.080, 0.0005]])
 
 
 @dataclasses.dataclass
@@ -41,6 +43,8 @@ class SimConfig:
     reserve_len: int = 2048          # baseline (non-predictive) KV reservation
     interactive_wait_budget_s: float = 2.0
     slo_factor: float = 2.0
+    preempt_gain_s: float = 1.0      # boundary-preemption hysteresis
+    preempt_cooldown_s: float = 5.0
     seed: int = 0
 
 
@@ -67,15 +71,21 @@ def default_profiles(hw: Optional[HardwareSpec] = None) -> Dict[str, ModelProfil
 
 
 class Simulator:
-    def __init__(self, jobs: Sequence[JobRecord], policy: Policy,
+    """The SIM-plane Substrate: simulated time, true-length execution."""
+
+    def __init__(self, jobs: Sequence[JobRecord],
+                 policy: Union[SchedPolicy, str],
                  cfg: Optional[SimConfig] = None,
                  profiles: Optional[Dict[str, ModelProfile]] = None,
                  rtt: Optional[np.ndarray] = None):
         self.cfg = cfg or SimConfig()
         self.jobs = {j.job_id: j for j in jobs}
-        self.policy = policy
+        self.policy = (make_policy(policy) if isinstance(policy, str)
+                       else policy)
         self.profiles = profiles or default_profiles()
-        self.rtt = rtt if rtt is not None else DEFAULT_RTT
+        self.rtt_s = validate_rtt(rtt if rtt is not None else DEFAULT_RTT)
+        self.preempt_gain_s = self.cfg.preempt_gain_s
+        self.preempt_cooldown_s = self.cfg.preempt_cooldown_s
         self.nodes: List[SimNode] = []
         nid = 0
         for c, n in enumerate(self.cfg.nodes_per_cluster):
@@ -98,7 +108,67 @@ class Simulator:
         self.cold_starts = 0
         self.preemptions = 0
         self.waiting: List[Tuple[float, int, int]] = []   # priority heap
-        policy.bind(self)
+        self._views: Dict[int, SchedStage] = {
+            s.stage_id: self._make_view(s) for j in jobs for s in j.stages}
+        self.policy.setup(self)
+
+    # --------------------------------------------------- Substrate protocol
+    def node_ids(self) -> Sequence[int]:
+        return range(len(self.nodes))
+
+    def signal(self, node_id: int):
+        return self.nodes[node_id].signal()
+
+    def load(self, node_id: int) -> int:
+        return len(self.nodes[node_id].running)
+
+    def can_admit(self, node_id: int, r_need: float,
+                  model: Optional[str] = None) -> bool:
+        return self.nodes[node_id].can_admit(r_need, model)
+
+    def t_act(self, node_id: int, model: str) -> float:
+        return self.nodes[node_id].t_act(model)
+
+    def degradation_cost(self, node_id: int,
+                         r_need: float) -> Optional[float]:
+        return self.nodes[node_id].degradation_cost(r_need)
+
+    def known_stages(self) -> List[SchedStage]:
+        return list(self._views.values())
+
+    def static_reservation(self, stage: SchedStage) -> float:
+        prof = self.profiles[stage.model]
+        return prof.r_kv(stage.prompt_len, self.cfg.reserve_len)
+
+    def t_exec_est(self, stage: SchedStage,
+                   l_hat: Optional[float]) -> float:
+        if l_hat is None:
+            l_hat = float(self.stage_by_id[stage.stage_id].true_len)
+        return self.profiles[stage.model].t_exec(stage.prompt_len, l_hat)
+
+    def true_remaining_s(self, stage: SchedStage) -> float:
+        job = self.jobs[stage.job_id]
+        rem = 0.0
+        for st in job.stages:
+            if st.stage_id in self.done:
+                continue
+            prof = self.profiles[st.model]
+            rem += prof.t_exec(st.obs.prompt_len, st.true_len)
+        return rem
+
+    def ready_since(self, stage_id: int) -> float:
+        return self.ready_at.get(stage_id, float("inf"))
+
+    def _make_view(self, s: StageRecord) -> SchedStage:
+        job = self.jobs[s.job_id]
+        return SchedStage(stage_id=s.stage_id, job_id=s.job_id,
+                          model=s.model, interactive=job.interactive,
+                          prompt_len=s.obs.prompt_len,
+                          arrival_s=job.arrival_s, deadline_s=job.deadline_s,
+                          obs=s.obs)
+
+    def view(self, stage_id: int) -> SchedStage:
+        return self._views[stage_id]
 
     # ------------------------------------------------------------ deadlines
     def _isolated_time(self, job: JobRecord) -> float:
@@ -163,7 +233,8 @@ class Simulator:
                     self.profiles[st.model].t_exec(st.obs.prompt_len,
                                                    st.true_len)
                     for st in job.stages if st.stage_id not in self.done)
-                self.policy.on_finish(s, actual_kv, rem)
+                self.policy.on_finish(self, self.view(stage_id), actual_kv,
+                                      rem)
                 # successors
                 succs = [st for st in job.stages
                          if s.stage_id in st.deps]
@@ -179,12 +250,11 @@ class Simulator:
 
     def _mark_ready(self, s: StageRecord, now: float) -> None:
         self.ready_at[s.stage_id] = now
-        pri = self.policy.priority(s, now)
+        pri = self.policy.priority(self, self.view(s.stage_id), now)
         heapq.heappush(self.waiting, (pri, s.stage_id, 0))
 
-    def _try_start(self, s: StageRecord, node: SimNode, now: float,
-                   push=None) -> bool:
-        r_need = self.policy.reservation(s)
+    def _try_start(self, s: StageRecord, node: SimNode, now: float) -> bool:
+        r_need = self.policy.reservation(self, self.view(s.stage_id))
         if not node.can_admit(r_need, s.model):
             return False
         return self._start_on(s, node, now, r_need)
@@ -197,12 +267,14 @@ class Simulator:
             node.make_room(r_need)   # degradation levels 1-2
         if t_act == float("inf") or not node.acc.can_admit(r_need):
             # genuinely infeasible right now: requeue
-            heapq.heappush(self.waiting,
-                           (self.policy.priority(s, now), s.stage_id, 0))
+            heapq.heappush(
+                self.waiting,
+                (self.policy.priority(self, self.view(s.stage_id), now),
+                 s.stage_id, 0))
             return False
         if t_act > 0.01:
             self.cold_starts += 1
-        rtt = float(self.rtt[s.obs.src_cluster, node.cluster_id])
+        rtt = float(self.rtt_s[s.obs.src_cluster, node.cluster_id])
         dur = prof.t_exec(s.obs.prompt_len, s.true_len)
         finish_at = now + rtt + t_act + dur
         enq = self.ready_at.get(s.stage_id, now)
@@ -218,8 +290,9 @@ class Simulator:
             if stage_id in self.done:
                 continue
             s = self.stage_by_id[stage_id]
-            r_need = self.policy.reservation(s)
-            nid = self.policy.route(s, r_need)
+            view = self.view(stage_id)
+            r_need = self.policy.reservation(self, view)
+            nid = self.policy.route(self, view, r_need)
             if nid is None:
                 retry.append((pri, stage_id, 0))
                 # head-of-line: policies block behind their head unless a

@@ -1,0 +1,13 @@
+"""Shared test doubles for the scheduling/serving suites."""
+
+
+class StubPred:
+    """Duck-typed MaestroPred: fixed (or callable-per-observation) length
+    predictions, no training required."""
+
+    def __init__(self, length=12.0, p_tool=0.0):
+        self.length, self.p_tool = length, p_tool
+
+    def predict_one(self, obs):
+        l = self.length(obs) if callable(self.length) else self.length
+        return {"length": float(l), "p_tool": float(self.p_tool)}

@@ -7,6 +7,7 @@ import pathlib
 import numpy as np
 import pytest
 
+from _stubs import StubPred
 from repro.core.predictor.features import StageObservation
 from repro.serving.cluster import (ClusterSpec, LiveJob, LiveStage, NodeSpec,
                                    build_fleet, build_zoo, jobs_from_trace)
@@ -15,17 +16,6 @@ from repro.serving.telemetry import Telemetry
 
 RTT = np.array([[0.001, 0.04], [0.04, 0.001]])
 ZOO_NAMES = ("qwen3-8b",)
-
-
-class StubPred:
-    """Duck-typed MaestroPred: fixed (or callable) length predictions."""
-
-    def __init__(self, length=12.0, p_tool=0.0):
-        self.length, self.p_tool = length, p_tool
-
-    def predict_one(self, obs):
-        l = self.length(obs) if callable(self.length) else self.length
-        return {"length": float(l), "p_tool": float(self.p_tool)}
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,168 @@
+"""Unified scheduling-policy API: registry completeness, substrate-
+statelessness (one policy object reusable across repeated runs), and
+sim/live decision parity — the same maestro instance drives the trace
+simulator and the real-engine gateway over one mini-trace and must make the
+same admission/routing decisions where the substrates are semantically
+identical (forced-choice topology, contention-forced queue order)."""
+import numpy as np
+import pytest
+
+from _stubs import StubPred
+from repro.core.predictor.features import StageObservation
+from repro.core.sched.policies import (POLICIES, FCFS, Maestro, make_policy,
+                                       registered_policies)
+from repro.data.tracegen import JobRecord, StageRecord, generate_trace
+from repro.serving.cluster import (ClusterSpec, LiveJob, LiveStage, NodeSpec,
+                                   build_fleet, build_zoo)
+from repro.serving.gateway import ClusterGateway, GatewayConfig
+from repro.sim.simulator import SimConfig, Simulator
+
+EXPECTED = {"fcfs", "least-loaded", "edf", "oracle-srtf", "maestro",
+            "maestro-np", "baseline-lb", "binpack", "maestro-aff"}
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_all_paper_policies():
+    assert EXPECTED <= set(registered_policies())
+    for name in EXPECTED:
+        assert POLICIES[name].name == name
+
+
+def test_make_policy_errors():
+    with pytest.raises(ValueError, match="unknown policy"):
+        make_policy("no-such-policy")
+    for name in sorted(EXPECTED):
+        if POLICIES[name].needs_predictor:
+            with pytest.raises(ValueError, match="predictor"):
+                make_policy(name)
+        else:
+            assert make_policy(name).name == name
+
+
+# ---------------------------------------------------------------------------
+# substrate-statelessness: reuse one instance across repeated runs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mk", [lambda: FCFS(),
+                                lambda: Maestro(StubPred(length=20.0))])
+def test_policy_instance_reusable_across_runs(mk):
+    """setup() resets all per-run state, so back-to-back runs with ONE
+    policy object reproduce the fresh-object result exactly (no leaked
+    queue/calibration state — the old GatewayPolicy.bind coupling)."""
+    pol = mk()
+    jobs = lambda: generate_trace(60, rate=2.0, seed=17)
+    cfg = SimConfig(nodes_per_cluster=(1, 1))
+    first = Simulator(jobs(), pol, cfg).run()
+    again = Simulator(jobs(), pol, cfg).run()      # same object, reused
+    fresh = Simulator(jobs(), mk(), cfg).run()
+    assert first == again == fresh
+    assert first.finished_jobs == 60
+
+
+# ---------------------------------------------------------------------------
+# sim/live parity
+# ---------------------------------------------------------------------------
+
+RTT = np.array([[0.001, 0.08], [0.08, 0.001]])
+ZOO = ("qwen3-8b",)
+
+
+def _obs(sid: int, prompt_len: int) -> StageObservation:
+    return StageObservation(app=0, role=0, position=0.0, invocation_idx=sid,
+                            tools_available=0, cot=False,
+                            prompt_len=prompt_len, model_id=0,
+                            text="parity stage", src_cluster=0)
+
+
+# per-stage predicted length = prompt_len / 4 — distinct, deterministic, and
+# identical for both substrates (the live decode budget of 16 caps none of
+# the real stages, so relative order is preserved everywhere)
+LENS = {0: 12, 1: 36, 2: 60}          # stage_id -> prompt_len (l_hat = /4)
+GIANT_PROMPT = 4_000_000              # l_hat 1e6 -> R_need >> any node
+
+
+def _record(policy, log):
+    """Wrap policy.route (re-wrappable) to record (stage_id, decision)."""
+    cls_route = type(policy).route
+
+    def route(sub, stage, r_need):
+        nid = cls_route(policy, sub, stage, r_need)
+        log.append((stage.stage_id, nid))
+        return nid
+
+    policy.route = route
+    return policy
+
+
+def _sim_jobs():
+    jobs = []
+    for sid, plen in {**LENS, 3: GIANT_PROMPT}.items():
+        st = StageRecord(job_id=sid, stage_id=sid, deps=[],
+                         obs=_obs(sid, plen), interactive=True,
+                         true_len=max(plen // 4, 1), tool_call=False)
+        jobs.append(JobRecord(job_id=sid, app="parity", interactive=True,
+                              arrival_s=0.0, stages=[st]))
+    return jobs
+
+
+def _live_jobs():
+    jobs = []
+    for sid, plen in {**LENS, 3: GIANT_PROMPT}.items():
+        st = LiveStage(stage_id=sid, job_id=sid, deps=[],
+                       obs=_obs(sid, plen), interactive=True,
+                       tokens=[1, 2, 3, 4, 5, 6], max_new=16)
+        jobs.append(LiveJob(job_id=sid, app="parity", interactive=True,
+                            arrival_s=0.0, stages=[st]))
+    return jobs
+
+
+def test_sim_live_parity_maestro():
+    """One maestro instance, both substrates, matched 2-cluster topology:
+    node 0 (near) is the only feasible node, node 1 (remote) can never admit,
+    and single-slot contention forces the SRTF order to be observable. The
+    successful dispatch sequence, the routed node of every dispatch, and the
+    admission rejection of the oversized job must agree across planes."""
+    pred = StubPred(length=lambda obs: obs.prompt_len / 4)
+    pol = Maestro(pred)
+
+    # --- sim plane: 2 clusters x 1 node, node 1 starved of HBM
+    sim_log = []
+    sim = Simulator(_sim_jobs(), _record(pol, sim_log),
+                    SimConfig(nodes_per_cluster=(1, 1), max_concurrency=1),
+                    rtt=RTT)
+    sim.nodes[1].acc.m_total = 1e9       # weights floor alone exceeds this
+    r_sim = sim.run()
+
+    # --- live plane: same topology on real engines (SAME policy object —
+    # setup() must fully reset the sim run's controller state)
+    zoo, host = build_zoo(ZOO, seed=1)
+    fleet = build_fleet(ClusterSpec(
+        nodes=(NodeSpec(0, max_slots=1, hbm_budget=1.2e9),
+               NodeSpec(1, max_slots=1, hbm_budget=20e6)),
+        rtt_s=RTT, model_names=ZOO), zoo=zoo, host=host)
+    live_log = []
+    gw = ClusterGateway(fleet, RTT, policy=_record(pol, live_log),
+                        cfg=GatewayConfig(reject_limit=500))
+    m_live = gw.run(_live_jobs())
+
+    # the three feasible single-stage jobs finish on both planes; the giant
+    # job is rejected by admission on both
+    assert r_sim.finished_jobs == 3
+    assert m_live.finished_jobs == 3
+    assert m_live.dropped_jobs == 1
+    assert m_live.admission_rejections > 0
+
+    def dispatched(log):
+        return [(sid, nid) for sid, nid in log if nid is not None]
+
+    # identical dispatch order (workflow-aware SRTF: shortest predicted
+    # remaining first) and identical routing (forced to the near node)
+    assert dispatched(sim_log) == dispatched(live_log) == [(0, 0), (1, 0),
+                                                           (2, 0)]
+    # the oversized stage is refused by every routing attempt on both planes
+    assert (3, None) in sim_log and (3, None) in live_log
+    for log in (sim_log, live_log):
+        assert all(nid is None for sid, nid in log if sid == 3)

@@ -7,8 +7,8 @@ from repro.core.predictor.gbdt import GBDTConfig
 from repro.data.apps import APPS
 from repro.data.tracegen import (flatten_stages, generate_trace,
                                  stratified_temporal_split)
-from repro.sim.policies import (EDF, FCFS, BaselineLB, Maestro,
-                                MaestroNoPreempt, OracleSRTF)
+from repro.core.sched.policies import (EDF, FCFS, BaselineLB, Maestro,
+                                       MaestroNoPreempt, OracleSRTF)
 from repro.sim.simulator import SimConfig, Simulator
 
 
