@@ -8,9 +8,13 @@ paper's 3.05x overcommit of Table V), while PHYSICAL pages are granted on
 demand under the accountant's admission check. Allocation failure is a signal
 (reject / degrade), never an OOM.
 
-The pure-python pool here is the accounting + page-table layer; the
-array-backed arena that actually stores K/V lives in repro.serving.kv_arena
-and mirrors these page grants 1:1.
+The pure-python pool here is the accounting + page-table layer. The
+array-backed store that physically holds K/V is
+:class:`repro.serving.kv_arena.KVArena`: a
+:class:`~repro.serving.kv_arena.ModelKVBinding` mirrors every page grant of
+this pool 1:1 onto an arena plane row (mapped on ``alloc_seq``/
+``extend_seq``, returned on ``free_seq`` + ``reclaim_unmapped``), so
+admission decisions made against this pool govern real memory.
 """
 from __future__ import annotations
 

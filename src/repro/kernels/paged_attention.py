@@ -78,8 +78,14 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     block_table: jax.Array, seq_lens: jax.Array,
                     page_size: int = 64, interpret: bool = False) -> jax.Array:
     """q [B, H, hd]; {k,v}_pages [n_pages, page_size, Hkv, hd];
-    block_table [B, max_slots] int32; seq_lens [B] int32. -> [B, H, hd]."""
+    block_table [B, max_slots] int32; seq_lens [B] int32. -> [B, H, hd].
+
+    seq_lens is clamped to >= 1: with n_used == 0 no compute block would run
+    and the finalize step would divide a zero accumulator — callers with idle
+    rows (the serving engine's free decode slots) point them at a null page.
+    """
     B, H, hd = q.shape
+    seq_lens = jnp.maximum(seq_lens, 1)
     Hkv = k_pages.shape[2]
     n_slots = block_table.shape[1]
     grid = (B, n_slots)

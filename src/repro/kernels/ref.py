@@ -24,10 +24,15 @@ def flash_attention_ref(q, k, v, causal: bool = True):
 
 
 def paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens):
-    """q [B,H,hd]; pages [n_pages, page, Hkv, hd]; block_table [B,slots]."""
+    """q [B,H,hd]; pages [n_pages, page, Hkv, hd]; block_table [B,slots].
+
+    ``seq_lens`` is clamped to >= 1 (matching the Pallas kernel's contract):
+    a zero-length row would softmax over an all-masked score vector and emit
+    NaN — serving points idle decode slots at a null page instead."""
     B, H, hd = q.shape
     n_pages, page, Hkv, _ = k_pages.shape
     slots = block_table.shape[1]
+    seq_lens = jnp.maximum(seq_lens, 1)
     # gather each sequence's pages into a contiguous [B, slots*page, Hkv, hd]
     k = k_pages[block_table].reshape(B, slots * page, Hkv, hd)
     v = v_pages[block_table].reshape(B, slots * page, Hkv, hd)

@@ -295,6 +295,89 @@ class Model:
         logits = (last @ self.unembed_weight(params)).astype(jnp.float32)
         return logits, new_cache
 
+    # ------------------------------------------------------- paged serving
+    def paged_kv_layout(self):
+        """Self-attention KV geometry for the serving arena.
+
+        Returns ``(bases, n_layers, Hkv, hd, dtype)`` where ``bases`` maps
+        each self-attention slot name to its layer base in the stacked plane
+        layout: slot ``a`` (in slot order), group ``g`` lives at stacked
+        layer ``a * n_groups + g``. ``n_layers == 0`` means nothing to page
+        (pure-SSM model: recurrent state only).
+        """
+        attn = [f"slot{i}" for i, (mx, _, _) in enumerate(self.kinds)
+                if mx == "attn"]
+        bases = {s: a * self.n_groups for a, s in enumerate(attn)}
+        return (bases, len(attn) * self.n_groups, self.cfg.n_kv_heads,
+                self.cfg.head_dim_, self.cfg.dtype)
+
+    def _group_decode_paged(self, x, gp, gc, g, kp, vp, block_tables,
+                            seq_lens, rows, offs, positions, bases, attend):
+        """_group_decode with self-attention KV read/written through arena
+        pages; ``gc``/``new_c`` carry only the non-paged (SSM / cross)
+        entries."""
+        cfg, ctx = self.cfg, self.ctx
+        new_c: Dict[str, Any] = {}
+        for i, (mixer, ffn, cross) in enumerate(self.kinds):
+            sp = gp[f"slot{i}"]
+            if mixer == "attn":
+                o, kp, vp = L.attn_decode_paged(
+                    sp["attn"], x, cfg, ctx, positions, kp, vp,
+                    bases[f"slot{i}"] + g, block_tables, seq_lens, rows,
+                    offs, attend)
+            else:
+                o, c = M2.ssm_decode(sp["ssm"], x, gc[f"slot{i}"], cfg, ctx)
+                new_c[f"slot{i}"] = c
+            x = x + o
+            if cross:
+                o, cc = L.attn_decode(sp["cross"], x, gc[f"slot{i}_cross"],
+                                      cfg, ctx, positions, cross=True)
+                x = x + o
+                new_c[f"slot{i}_cross"] = cc
+            if ffn == "dense":
+                x = x + L.ffn_apply(sp["ffn"], x, cfg, ctx, gelu=cfg.ffn_gelu)
+            elif ffn == "moe":
+                x = x + MOE.moe_apply(sp["moe"], x, cfg, ctx)
+        return x, new_c, kp, vp
+
+    def decode_step_paged(self, params, state_cache, k_pages, v_pages,
+                          block_tables, seq_lens, rows, offs, tokens,
+                          positions, attend):
+        """One token for every sequence through the PAGED KV arena.
+
+        Mirrors :meth:`decode_step`, but self-attention KV lives in the
+        shared node arena plane (``k_pages``/``v_pages``, written in place
+        via scatter and read through per-sequence ``block_tables``);
+        ``state_cache`` carries only SSM state/conv and static cross-attn
+        entries (see :meth:`state_cache_specs`). ``attend`` is the paged
+        attention implementation bound once at engine construction.
+        Returns (logits [B,Vp] f32, state_cache, k_pages, v_pages) — all
+        cache-like arguments are donatable.
+        """
+        bases, _, _, _, _ = self.paged_kv_layout()
+        x = self.embed(params, tokens)
+
+        def body(carry, inp):
+            x, sc, kp, vp = carry
+            gp, g = inp
+            gc = jax.tree.map(
+                lambda a: lax.dynamic_index_in_dim(a, g, 0, keepdims=False),
+                sc)
+            x, new_c, kp, vp = self._group_decode_paged(
+                x, gp, gc, g, kp, vp, block_tables, seq_lens, rows, offs,
+                positions, bases, attend)
+            sc = jax.tree.map(
+                lambda a, n: lax.dynamic_update_index_in_dim(a, n, g, 0),
+                sc, new_c)
+            return (x, sc, kp, vp), None
+
+        (x, state_cache, k_pages, v_pages), _ = flags.scan(
+            body, (x, state_cache, k_pages, v_pages),
+            (params["groups"], jnp.arange(self.n_groups)))
+        x = rms_norm(x, params["final_ln"], self.cfg.norm_eps)
+        logits = (x[:, 0] @ self.unembed_weight(params)).astype(jnp.float32)
+        return logits, state_cache, k_pages, v_pages
+
     # ----------------------------------------------------------- cache specs
     def _slot_cache_spec(self, kind: SlotKind, batch: int, seq: int):
         """ShapeDtypeStruct + PartitionSpec for one slot's decode cache."""
@@ -348,4 +431,15 @@ class Model:
                     st[kname], sp[kname] = expand(r)
                 structs[name] = st
                 specs[name] = sp
+        return structs, specs
+
+    def state_cache_specs(self, batch: int, seq: int):
+        """:meth:`cache_specs` minus self-attention K/V — those pages live in
+        the serving arena; what remains (SSM state/conv, static cross-attn
+        K/V) is the per-slot state an engine still holds densely."""
+        structs, specs = self.cache_specs(batch, seq)
+        for i, (mixer, _, _) in enumerate(self.kinds):
+            if mixer == "attn":
+                structs.pop(f"slot{i}", None)
+                specs.pop(f"slot{i}", None)
         return structs, specs

@@ -7,14 +7,20 @@ prefill for newly admitted sequences, then one batched decode step for all
 active sequences. Preemption is boundary-only: requests are only evicted
 between engine steps, with their KV accounted and reclaimable.
 
-KV layout: per-slot contiguous cache (the model's decode cache) whose pages
-are accounted through the VirtualKVPool; the physical paged arena + Pallas
-paged_attention kernel live in repro.kernels (the accounting semantics —
-virtual budget >> physical, admission-checked growth — are identical).
+KV layout: self-attention K/V lives in the node's PHYSICAL paged arena
+(:mod:`repro.serving.kv_arena`) — every pool page grant maps to one arena
+row, colocated engines on a node share one store, and decode attends through
+per-sequence block tables via the Pallas ``paged_attention`` kernel (the
+``kernels.ref`` jnp oracle is the CPU fallback, selected once at engine
+construction). What stays per-engine is the small dense *state* cache (SSM
+state/conv + static cross-attn K/V), which is registered with the accountant
+and dropped on sleep/offload. Models with no self-attention KV (pure SSM)
+run the dense decode path; their pool grants remain accounting-only.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -24,7 +30,16 @@ import numpy as np
 from repro.core.runtime.accounting import MemoryAccountant
 from repro.core.runtime.kv_pool import VirtualKVPool
 from repro.core.sched.margins import RhoEstimator
+from repro.kernels import paged_attention as _pa
+from repro.kernels import ref as _ref
 from repro.models.transformer import Model
+from repro.serving.kv_arena import KVArena
+
+
+class PromptTooLongError(ValueError):
+    """Prompt cannot fit the engine's sequence window (needs <= s_max - 1
+    tokens so at least one decode position remains). Raised at ``submit``
+    time — silent KV overflow is never possible."""
 
 
 @dataclasses.dataclass
@@ -36,37 +51,112 @@ class Request:
     extras: Optional[Dict[str, Any]] = None
     out: List[int] = dataclasses.field(default_factory=list)
     eos: Optional[int] = None
+    truncated: bool = False               # finished early (KV exhausted)
 
 
 class Engine:
     def __init__(self, model: Model, params, accountant: MemoryAccountant,
                  max_slots: int = 4, s_max: int = 256,
-                 page_tokens: int = 16):
+                 page_tokens: int = 16, arena: Optional[KVArena] = None,
+                 kv_backend: Optional[str] = None):
+        """``arena``: the node-shared physical page store (a private one is
+        created for standalone engines). ``kv_backend``: "pallas" | "ref" |
+        "dense" — default picks the Pallas paged kernel on TPU and the jnp
+        reference elsewhere; models without self-attention KV always run
+        "dense" (state-only)."""
         self.model = model
         self.params = params
         self.acc = accountant
         self.s_max = s_max
         self.max_slots = max_slots
-        alpha = max(model.cfg.kv_bytes_per_token(), 1)
+        self.arena = arena if arena is not None else KVArena(page_tokens)
+        self.page_tokens = self.arena.page_tokens
+        alpha = max(model.cfg.kv_bytes_per_token(
+            dtype_bytes=jnp.dtype(model.cfg.dtype).itemsize), 1)
         self.alpha = alpha
-        self.pool = VirtualKVPool(accountant, page_bytes=alpha * page_tokens,
-                                  page_tokens=page_tokens)
+        self.pool = VirtualKVPool(accountant,
+                                  page_bytes=alpha * self.page_tokens,
+                                  page_tokens=self.page_tokens)
         self.pool.set_virtual_budget(model.cfg.name,
                                      alpha * s_max * max_slots * 4)
+        bases, n_layers, Hkv, hd, kv_dtype = model.paged_kv_layout()
+        if kv_backend is None:
+            kv_backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+        if n_layers == 0:
+            kv_backend = "dense"          # nothing to page: state-only model
+        assert kv_backend in ("pallas", "ref", "dense"), kv_backend
+        self.kv_backend = kv_backend
+        self.paged = kv_backend != "dense"
+        self._kv_bases = bases
+        self._kv_slots = sorted(bases, key=bases.get)
+        self.binding = self.arena.register(
+            model.cfg.name, self.pool, s_max=s_max,
+            n_layers=n_layers if self.paged else 0,
+            n_kv_heads=Hkv, head_dim=hd, dtype=kv_dtype)
         self.rho = RhoEstimator()
         self.waiting: List[Request] = []
         self.active: Dict[int, Request] = {}
         self.slot_of: Dict[int, int] = {}
         self.free_slots = list(range(max_slots))
         self.positions = np.zeros(max_slots, np.int32)
-        structs, _ = model.cache_specs(max_slots, s_max)
+        self._needs: Dict[int, float] = {}   # admitted R_need, by req_id
+        self._state_key = f"{model.cfg.name}::decode-state"
+        self._state_bytes = 0
+        self.cache = None
+        self._ensure_cache()
+        if self.paged:
+            attend = (functools.partial(_pa.paged_attention,
+                                        page_size=self.page_tokens)
+                      if kv_backend == "pallas"
+                      else _ref.paged_attention_ref)
+            self._decode = jax.jit(
+                functools.partial(model.decode_step_paged, attend=attend),
+                donate_argnums=(1, 2, 3))
+        else:
+            self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self.finished: List[Request] = []
+
+    # -------------------------------------------------------------- state
+    def _ensure_cache(self) -> None:
+        """(Re)allocate the dense per-slot cache — SSM state / conv + static
+        cross K/V on the paged path, the full dense KV cache on the dense
+        fallback — and register its bytes with the accountant so engine
+        state is never silently device-resident."""
+        if self.cache is not None:
+            return
+        specs_fn = (self.model.state_cache_specs if self.paged
+                    else self.model.cache_specs)
+        structs, _ = specs_fn(self.max_slots, self.s_max)
         self.cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                   structs)
-        self.finished: List[Request] = []
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        nbytes = sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+                     for s in jax.tree.leaves(structs))
+        self._state_bytes = nbytes
+        if nbytes:
+            self.acc.register_context(self._state_key, nbytes)
+
+    def release_kv(self) -> None:
+        """Drop every byte of device KV this engine holds: boundary-evict
+        active requests back to the front of the waiting queue (their arena
+        pages return to pool + plane), then free the dense state cache and
+        its accountant registration. Called on sleep/offload — a slept model
+        must actually return its memory."""
+        evicted = [req for rid in list(self.active)
+                   if (req := self.evict(rid)) is not None]
+        self.waiting[:0] = evicted     # requeue ahead, original order kept
+        self.binding.release_all()
+        if self.cache is not None:
+            self.cache = None
+            if self._state_bytes:
+                self.acc.unregister_context(self._state_key)
+            self._state_bytes = 0
 
     # ------------------------------------------------------------- admission
     def submit(self, req: Request) -> None:
+        if len(req.tokens) > self.s_max - 1:
+            raise PromptTooLongError(
+                f"prompt of {len(req.tokens)} tokens exceeds the engine "
+                f"window (s_max={self.s_max}, >=1 decode slot required)")
         self.waiting.append(req)
 
     def _r_need(self, req: Request) -> float:
@@ -78,23 +168,38 @@ class Engine:
         while self.waiting and self.free_slots:
             req = self.waiting[0]
             need = self._r_need(req)
-            if not self.pool.alloc_seq(req.req_id, self.model.cfg.name,
-                                       int(need / self.alpha)):
+            # pages must cover prompt + the first decode write, but never
+            # exceed the sequence window (KV past s_max is unusable, and
+            # block tables are sized for exactly ceil(s_max/page) pages)
+            need_tokens = min(max(int(need / self.alpha),
+                                  len(req.tokens) + 1), self.s_max)
+            if not self.binding.alloc_seq(req.req_id, self.model.cfg.name,
+                                          need_tokens):
                 break   # memory-infeasible: reject-for-now (backpressure)
             self.waiting.pop(0)
             slot = self.free_slots.pop()
             self.slot_of[req.req_id] = slot
             self.active[req.req_id] = req
+            self._needs[req.req_id] = need
             admitted.append(req)
         return admitted
 
     # -------------------------------------------------------------- prefill
     def _prefill(self, req: Request) -> None:
+        self._ensure_cache()
         slot = self.slot_of[req.req_id]
         toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
         logits, cache = self.model.prefill(self.params, toks,
                                            req.extras or {})
         P = len(req.tokens)
+        if self.paged:
+            # [G,1,P,Hkv,hd] per slot -> layer-stacked [L,P,Hkv,hd] in
+            # plane layout order (slot base + group)
+            k_all = jnp.concatenate(
+                [cache[s]["k"][:, 0] for s in self._kv_slots], axis=0)
+            v_all = jnp.concatenate(
+                [cache[s]["v"][:, 0] for s in self._kv_slots], axis=0)
+            self.binding.write_prompt(req.req_id, k_all, v_all)
 
         def write(dst, src):
             # dst [G, max_slots, S_max, ...]; src [G, 1, P, ...]
@@ -106,6 +211,8 @@ class Engine:
             return dst.at[:, slot].set(src[:, 0])
 
         for name, entry in cache.items():
+            if self.paged and name in self._kv_bases:
+                continue                           # lives in the arena
             for kname, arr in entry.items():
                 tgt = self.cache[name][kname]
                 if kname in ("k", "v"):
@@ -120,13 +227,26 @@ class Engine:
         """One engine iteration; returns requests finished this step."""
         for req in self._admit():
             self._prefill(req)
+        if self.active and self.paged:
+            # grow page coverage for this step's token writes; a sequence
+            # the pool cannot extend finishes truncated (honest
+            # backpressure instead of silent overflow)
+            for rid in list(self.active):
+                pos = int(self.positions[self.slot_of[rid]])
+                if not self.binding.ensure_tokens(rid, pos + 1):
+                    self.active[rid].truncated = True
+                    self._release(rid)
         if self.active:
+            self._ensure_cache()
             toks = np.zeros((self.max_slots, 1), np.int32)
             for rid, req in self.active.items():
                 toks[self.slot_of[rid], 0] = req.out[-1]
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(self.positions))
+            if self.paged:
+                logits = self._decode_paged(toks)
+            else:
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(self.positions))
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
             done = []
             for rid, req in list(self.active.items()):
@@ -142,13 +262,37 @@ class Engine:
                 self._release(rid)
         return [r for r in self.finished]
 
+    def _decode_paged(self, toks: np.ndarray):
+        """One paged decode step: build block tables / write coordinates for
+        the active slots and run the arena-backed decode. Idle slots point at
+        the plane's null row (reads and writes land there harmlessly)."""
+        bt = np.zeros((self.max_slots, self.binding.bt_width), np.int32)
+        seq_lens = np.ones(self.max_slots, np.int32)
+        rows = np.zeros(self.max_slots, np.int32)
+        offs = np.zeros(self.max_slots, np.int32)
+        for rid in self.active:
+            slot = self.slot_of[rid]
+            pos = int(self.positions[slot])
+            table = self.binding.row_table(rid)
+            bt[slot] = table
+            seq_lens[slot] = pos + 1
+            rows[slot] = table[pos // self.page_tokens]
+            offs[slot] = pos % self.page_tokens
+        plane = self.binding.plane
+        logits, self.cache, plane.k, plane.v = self._decode(
+            self.params, self.cache, plane.k, plane.v, jnp.asarray(bt),
+            jnp.asarray(seq_lens), jnp.asarray(rows), jnp.asarray(offs),
+            jnp.asarray(toks), jnp.asarray(self.positions))
+        return logits
+
     def _release(self, rid: int) -> None:
         req = self.active.pop(rid)
         slot = self.slot_of.pop(rid)
         actual = self.alpha * (len(req.tokens) + len(req.out))
-        self.rho.observe(actual, max(self._r_need(req), 1.0))
-        self.pool.free_seq(rid)
-        self.pool.reclaim_unmapped()    # elastic shrink back to the pool
+        # calibrate against the reservation ADMISSION charged — recomputing
+        # r_need here would read a rho already moved by earlier releases
+        self.rho.observe(actual, max(self._needs.pop(rid, 1.0), 1.0))
+        self.binding.free_seq(rid)      # pages -> pool -> arena rows
         self.free_slots.append(slot)
         self.positions[slot] = 0
         self.finished.append(req)
@@ -163,15 +307,16 @@ class Engine:
 
     def evict(self, req_id: int) -> Optional[Request]:
         """Boundary preemption: release an active request between engine
-        steps. Its KV pages return to the pool (and the accountant), the slot
-        frees, and the partial output is discarded — the caller requeues the
-        stage, which restarts from its prompt (§III.D boundary semantics)."""
+        steps. Its KV pages return to the pool, the arena plane and the
+        accountant, the slot frees, and the partial output is discarded —
+        the caller requeues the stage, which restarts from its prompt
+        (§III.D boundary semantics)."""
         req = self.active.pop(req_id, None)
         if req is None:
             return self.cancel(req_id)
         slot = self.slot_of.pop(req_id)
-        self.pool.free_seq(req_id)
-        self.pool.reclaim_unmapped()
+        self._needs.pop(req_id, None)
+        self.binding.free_seq(req_id)
         self.free_slots.append(slot)
         self.positions[slot] = 0
         req.out.clear()

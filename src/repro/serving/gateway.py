@@ -43,7 +43,7 @@ from repro.core.sched.policies import SchedPolicy, make_policy
 from repro.core.sched.substrate import SchedStage
 from repro.core.topology import validate_rtt
 from repro.serving.cluster import LiveJob, LiveStage
-from repro.serving.engine import Request
+from repro.serving.engine import PromptTooLongError, Request
 from repro.serving.node_runtime import NodeRuntime
 from repro.serving.telemetry import GatewayMetrics, Telemetry
 
@@ -118,6 +118,11 @@ class ClusterGateway:
         # during the rtt + t_act transit window, released when the engine's
         # own accounting takes over at submit
         self.pending_resv: Dict[int, float] = {nid: 0.0 for nid in self.fleet}
+        # largest prompt ANY node's engine window accepts (>=1 decode slot);
+        # per-node windows can be smaller — the engine's typed
+        # PromptTooLongError in _flush_submissions stays as the backstop
+        self._max_prompt = max(n.s_max for n in self.fleet.values()) - 1
+        self._truncated = 0
         self._rejects: Dict[int, int] = collections.defaultdict(int)
         self._views: Dict[int, SchedStage] = {}
 
@@ -291,9 +296,19 @@ class ClusterGateway:
                    for j in self.jobs)
 
     def metrics(self) -> GatewayMetrics:
-        return self.telemetry.summary(
+        m = self.telemetry.summary(
             self.policy.name, list(self.jobs.values()), self.job_finish,
             self.cfg.interactive_budget_s, self.now)
+        # physical paged-KV arena: worst-node overcommit + fleet peaks
+        m.kv_overcommit_ratio = max(
+            (n.kv_overcommit_ratio() for n in self.fleet.values()
+             if n.engines), default=0.0)
+        m.arena_peak_pages = sum(n.arena.peak_mapped_pages
+                                 for n in self.fleet.values())
+        m.arena_utilization = max(
+            (n.arena.utilization() for n in self.fleet.values()), default=0.0)
+        m.truncated_stages = self._truncated
+        return m
 
     def step(self) -> None:
         now = self.now
@@ -339,6 +354,17 @@ class ClusterGateway:
                 break
             if stage.job_id in self.dropped or stage.stage_id in self.done:
                 self._q_pop(now)
+                continue
+            if len(stage.tokens) > self._max_prompt:
+                # no engine window in the fleet can hold this prompt: finish
+                # it truncated HERE, before it costs a dispatch, transit
+                # delay, cold start or make_room eviction it can never use
+                self._q_pop(now)
+                self._truncated += 1
+                req = Request(req_id=stage.stage_id,
+                              tokens=list(stage.tokens),
+                              max_new=stage.max_new, truncated=True)
+                self._complete(stage, self.model_of(stage), req, now)
                 continue
             view = self.view(stage)
             r_need = self.policy.reservation(self, view)
@@ -391,7 +417,7 @@ class ClusterGateway:
         ev.rtt_s, ev.t_act_s = rtt, t_act
 
     def _flush_submissions(self, now: float) -> None:
-        for rec in self.inflight.values():
+        for rec in list(self.inflight.values()):
             if rec.submitted or rec.submit_at > now + 1e-9:
                 continue
             node = self.fleet[rec.node_id]
@@ -400,9 +426,17 @@ class ClusterGateway:
                 # engines / drop warm contexts so the reservation fits
                 node.make_room(rec.r_need)
             t0 = time.perf_counter()
-            node.submit(rec.model, rec.req)   # real activation on demand
             rec.submitted = True
             self.pending_resv[rec.node_id] -= rec.r_need
+            try:
+                node.submit(rec.model, rec.req)   # real activation on demand
+            except PromptTooLongError:
+                # typed rejection instead of silent KV overflow: the stage
+                # finishes truncated (empty output) and its job continues
+                rec.req.truncated = True
+                self._truncated += 1
+                self._on_finish(rec.req, now)
+                continue
             ev = self.telemetry.event(rec.stage.stage_id, rec.stage.job_id,
                                       rec.stage.interactive)
             ev.start_t = now
@@ -412,24 +446,33 @@ class ClusterGateway:
         rec = self.inflight.pop(req.req_id, None)
         if rec is None:
             return
-        stage = rec.stage
         self.node_load[rec.node_id] -= 1
+        self._complete(rec.stage, rec.model, req, now)
+
+    def _complete(self, stage: LiveStage, model: str, req: Request,
+                  now: float) -> None:
         self.done.add(stage.stage_id)
         self._rejects.pop(stage.stage_id, None)
         ev = self.telemetry.event(stage.stage_id, stage.job_id,
                                   stage.interactive)
-        ev.finish_t, ev.out_len = now, len(req.out)
+        # telemetry's finished sentinel is finish_t > 0; dispatch-time
+        # truncation can legitimately land at exactly t=0, so clamp
+        ev.finish_t, ev.out_len = max(now, 1e-9), len(req.out)
         # Calibrate on the SAME basis the prediction used (the uncapped
         # trace-scale lengths): the realized output, mapped back through the
         # live decode budget, against L_hat. Comparing live capped bytes to
         # the uncapped R_kv_hat would make the error identically zero and
         # pin rho to its floor.
-        prof = self.profiles[rec.model]
-        nominal = stage.nominal_len or stage.max_new
-        actual_len = nominal * len(req.out) / max(stage.max_new, 1)
-        actual_kv = prof.r_kv(stage.obs.prompt_len, actual_len)
-        self.policy.on_finish(self, self.view(stage), actual_kv,
-                              self.job_remaining_v(stage))
+        if not req.truncated:
+            # truncated stages never ran to their true length — feeding
+            # their (near-zero) realized KV into calibration would record a
+            # phantom maximal overprediction and skew rho for real stages
+            prof = self.profiles[model]
+            nominal = stage.nominal_len or stage.max_new
+            actual_len = nominal * len(req.out) / max(stage.max_new, 1)
+            actual_kv = prof.r_kv(stage.obs.prompt_len, actual_len)
+            self.policy.on_finish(self, self.view(stage), actual_kv,
+                                  self.job_remaining_v(stage))
         job = self.jobs[stage.job_id]
         self.job_done_stages[stage.job_id] += 1
         if self.job_done_stages[stage.job_id] == len(job.stages):

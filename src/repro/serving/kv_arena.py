@@ -1,0 +1,312 @@
+"""Physical paged KV arena: the array-backed store behind the elastic
+virtual KV pool (§III.C spatial multiplexing, made memory-honest).
+
+One :class:`KVArena` per ``NodeRuntime`` owns the K/V page storage every
+colocated engine decodes from. Storage is organised into *planes* — one pair
+of ``[n_layers, n_rows, page_tokens, Hkv, hd]`` K and V arrays per distinct
+KV geometry — so models with identical per-token KV shape (e.g. two reduced
+dense configs) physically interleave their pages in the same arrays, which is
+what makes multi-model co-location spatially multiplexed rather than
+partitioned.
+
+The arena itself never decides admission. Every alloc / grow / free / evict
+flows through the engine's :class:`~repro.core.runtime.kv_pool.VirtualKVPool`
+(virtual budgets, accountant-checked physical growth), and the per-engine
+:class:`ModelKVBinding` mirrors the pool's page grants 1:1: each granted pool
+page is pinned to exactly one plane row for as long as it stays mapped, and
+``reclaim()`` returns rows to the plane exactly when the pool unmaps pages
+back to the accountant. Admission and Algorithm-2 degradation therefore keep
+their existing semantics while now governing real storage.
+
+Row 0 of every plane is a reserved *null row*: engines point idle decode
+slots at it (reads and writes land there harmlessly), so it is never granted
+to a sequence.
+
+Sizing knobs: ``page_tokens`` (tokens per page, must match the pools that
+bind to the arena) and ``init_rows`` (initial plane capacity; capacity grows
+geometrically so jitted decode signatures stay stable between doublings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.runtime.kv_pool import VirtualKVPool
+
+NULL_ROW = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneSpec:
+    """KV geometry of one arena plane (the plane-sharing key)."""
+    n_layers: int          # stacked self-attention layers
+    page_tokens: int
+    n_kv_heads: int
+    head_dim: int
+    dtype: str             # canonical dtype name (jnp.dtype(...).name)
+
+    @property
+    def row_bytes(self) -> int:
+        """Physical bytes of one K+V row (= one page across all layers)."""
+        return (2 * self.n_layers * self.page_tokens * self.n_kv_heads
+                * self.head_dim * jnp.dtype(self.dtype).itemsize)
+
+
+class ArenaPlane:
+    """One geometry's physical page store: K/V arrays + a free-row list."""
+
+    def __init__(self, spec: PlaneSpec, init_rows: int = 8):
+        self.spec = spec
+        n = max(2, init_rows)              # row 0 is the reserved null row
+        self.k = jnp.zeros(self._shape(n), spec.dtype)
+        self.v = jnp.zeros(self._shape(n), spec.dtype)
+        self.free_rows: List[int] = list(range(n - 1, 0, -1))
+
+    def _shape(self, n_rows: int):
+        s = self.spec
+        return (s.n_layers, n_rows, s.page_tokens, s.n_kv_heads, s.head_dim)
+
+    @property
+    def n_rows(self) -> int:
+        return self.k.shape[1]
+
+    def take_row(self) -> int:
+        if not self.free_rows:
+            self._grow()
+        return self.free_rows.pop()
+
+    def give_row(self, row: int) -> None:
+        assert row != NULL_ROW
+        self.free_rows.append(row)
+
+    def _grow(self) -> None:
+        """Double capacity (geometric: keeps decode retraces logarithmic)."""
+        old = self.n_rows
+        new = old * 2
+        self.k = jnp.zeros(self._shape(new), self.spec.dtype).at[:, :old].set(self.k)
+        self.v = jnp.zeros(self._shape(new), self.spec.dtype).at[:, :old].set(self.v)
+        self.free_rows.extend(range(new - 1, old - 1, -1))
+
+    def write_prompt(self, n_layers: int, rows: np.ndarray,
+                     k: jnp.ndarray, v: jnp.ndarray) -> None:
+        """Scatter a prompt's KV into this plane.
+
+        ``k``/``v`` are ``[n_layers, P, Hkv, hd]`` (layer-stacked prefill
+        cache); ``rows`` the plane rows of the sequence's first
+        ``ceil(P/page_tokens)`` pages.
+        """
+        page = self.spec.page_tokens
+        P = k.shape[1]
+        n = -(-P // page)
+        pad = n * page - P
+        if pad:
+            padding = ((0, 0), (0, pad), (0, 0), (0, 0))
+            k = jnp.pad(k, padding)
+            v = jnp.pad(v, padding)
+        shape = (n_layers, n, page) + k.shape[2:]
+        idx = jnp.asarray(rows[:n], jnp.int32)
+        self.k = self.k.at[:n_layers, idx].set(
+            k.reshape(shape).astype(self.k.dtype))
+        self.v = self.v.at[:n_layers, idx].set(
+            v.reshape(shape).astype(self.v.dtype))
+
+
+class ModelKVBinding:
+    """The 1:1 mirror between one engine's pool grants and arena rows.
+
+    Every pool page id maps to exactly one plane row from the moment it is
+    granted until the pool unmaps it (``reclaim``). Models with no
+    self-attention KV (pure SSM) bind with ``plane=None``: pool accounting
+    still flows (their recurrent state is charged elsewhere) but no rows are
+    held.
+    """
+
+    def __init__(self, arena: "KVArena", name: str, pool: VirtualKVPool,
+                 plane: Optional[ArenaPlane], n_layers: int, s_max: int):
+        self.arena = arena
+        self.name = name
+        self.pool = pool
+        self.plane = plane
+        self.n_layers = n_layers
+        self.bt_width = max(1, -(-s_max // arena.page_tokens))
+        self.row_of: Dict[int, int] = {}       # pool page id -> plane row
+
+    @property
+    def paged(self) -> bool:
+        return self.plane is not None
+
+    # -------------------------------------------------------------- grants
+    def alloc_seq(self, seq_id: int, model: str, tokens: int) -> bool:
+        if not self.pool.alloc_seq(seq_id, model, tokens):
+            return False
+        self._map(seq_id)
+        return True
+
+    def ensure_tokens(self, seq_id: int, total_tokens: int) -> bool:
+        """Grow the sequence's page span to cover ``total_tokens``."""
+        s = self.pool.seqs[seq_id]
+        if total_tokens > s.tokens:
+            if not self.pool.extend_seq(seq_id, total_tokens - s.tokens):
+                return False
+            self._map(seq_id)
+        return True
+
+    def _map(self, seq_id: int) -> None:
+        if self.plane is not None:
+            for p in self.pool.seqs[seq_id].pages:
+                if p not in self.row_of:
+                    self.row_of[p] = self.plane.take_row()
+        self.arena.note_usage()
+
+    # --------------------------------------------------------------- frees
+    def free_seq(self, seq_id: int) -> None:
+        """Release a sequence's pages to the pool, then unmap (elastic
+        shrink): rows return to the plane exactly when the pool returns the
+        bytes to the accountant."""
+        self.pool.free_seq(seq_id)
+        self.reclaim()
+
+    def reclaim(self) -> None:
+        if self.plane is not None:
+            for p in self.pool.free_pages:
+                row = self.row_of.pop(p, None)
+                if row is not None:
+                    self.plane.give_row(row)
+        self.pool.reclaim_unmapped()
+        self.arena.note_usage()
+
+    def release_all(self) -> None:
+        for sid in list(self.pool.seqs):
+            self.pool.free_seq(sid)
+        self.reclaim()
+
+    # --------------------------------------------------------------- views
+    def seq_rows(self, seq_id: int) -> List[int]:
+        return [self.row_of[p] for p in self.pool.seqs[seq_id].pages]
+
+    def row_table(self, seq_id: int) -> np.ndarray:
+        """Block table of one sequence, padded with the null row."""
+        out = np.full(self.bt_width, NULL_ROW, np.int32)
+        rows = self.seq_rows(seq_id)
+        assert len(rows) <= self.bt_width, (len(rows), self.bt_width)
+        out[:len(rows)] = rows
+        return out
+
+    def write_prompt(self, seq_id: int, k: jnp.ndarray, v: jnp.ndarray) -> None:
+        if self.plane is not None:
+            rows = np.asarray(self.seq_rows(seq_id), np.int32)
+            self.plane.write_prompt(self.n_layers, rows, k, v)
+
+    # ----------------------------------------------------------- invariant
+    def check_mirror(self) -> bool:
+        """Pool<->arena mirror invariant: every granted page has exactly one
+        live row; no row is shared, none is the null row; free rows +
+        mapped rows tile the plane."""
+        if self.plane is None:
+            return not self.row_of
+        seen: set = set()
+        for s in self.pool.seqs.values():
+            for p in s.pages:
+                row = self.row_of.get(p)
+                if row is None or row == NULL_ROW or row in seen:
+                    return False
+                seen.add(row)
+        # pages freed to the pool but not yet reclaimed keep their rows
+        for p in self.pool.free_pages:
+            row = self.row_of.get(p)
+            if row is not None:
+                if row == NULL_ROW or row in seen:
+                    return False
+                seen.add(row)
+        return len(seen) == len(self.row_of)
+
+
+class KVArena:
+    """Node-level physical paged KV store shared by all colocated engines."""
+
+    def __init__(self, page_tokens: int = 16, init_rows: int = 8):
+        self.page_tokens = page_tokens
+        self.init_rows = init_rows
+        self.planes: Dict[PlaneSpec, ArenaPlane] = {}
+        self.bindings: Dict[str, ModelKVBinding] = {}
+        self.peak_mapped_pages = 0
+        self.peak_mapped_bytes = 0.0
+        self.peak_rows = 0
+
+    def register(self, name: str, pool: VirtualKVPool, s_max: int,
+                 n_layers: int, n_kv_heads: int, head_dim: int,
+                 dtype) -> ModelKVBinding:
+        """Bind one engine's pool to the arena. ``n_layers == 0`` means the
+        model holds no pageable self-attention KV (accounting-only binding)."""
+        assert pool.page_tokens == self.page_tokens, \
+            (pool.page_tokens, self.page_tokens)
+        if name in self.bindings:
+            raise ValueError(f"model {name!r} already bound to this arena")
+        plane = None
+        if n_layers > 0:
+            spec = PlaneSpec(n_layers=n_layers, page_tokens=self.page_tokens,
+                             n_kv_heads=n_kv_heads, head_dim=head_dim,
+                             dtype=jnp.dtype(dtype).name)
+            plane = self.planes.get(spec)
+            if plane is None:
+                plane = self.planes[spec] = ArenaPlane(spec, self.init_rows)
+        b = ModelKVBinding(self, name, pool, plane, n_layers, s_max)
+        self.bindings[name] = b
+        return b
+
+    # ------------------------------------------------------------- metrics
+    def mapped_pages(self) -> int:
+        return sum(b.pool.n_pages for b in self.bindings.values())
+
+    def mapped_bytes(self) -> float:
+        return sum(b.pool.n_pages * b.pool.page_bytes
+                   for b in self.bindings.values())
+
+    def mapped_rows(self) -> int:
+        return sum(len(b.row_of) for b in self.bindings.values())
+
+    def capacity_rows(self) -> int:
+        return sum(p.n_rows - 1 for p in self.planes.values())
+
+    def capacity_bytes(self) -> float:
+        return sum((p.n_rows - 1) * p.spec.row_bytes
+                   for p in self.planes.values())
+
+    def utilization(self) -> float:
+        """Peak mapped rows over allocated plane capacity."""
+        cap = self.capacity_rows()
+        return self.peak_rows / cap if cap else 0.0
+
+    def note_usage(self) -> None:
+        self.peak_mapped_pages = max(self.peak_mapped_pages,
+                                     self.mapped_pages())
+        self.peak_mapped_bytes = max(self.peak_mapped_bytes,
+                                     self.mapped_bytes())
+        self.peak_rows = max(self.peak_rows, self.mapped_rows())
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "planes": len(self.planes),
+            "page_tokens": self.page_tokens,
+            "mapped_pages": self.mapped_pages(),
+            "mapped_rows": self.mapped_rows(),
+            "capacity_rows": self.capacity_rows(),
+            "capacity_bytes": self.capacity_bytes(),
+            "peak_mapped_pages": self.peak_mapped_pages,
+            "peak_mapped_bytes": self.peak_mapped_bytes,
+            "utilization": round(self.utilization(), 4),
+        }
+
+    def check_mirror(self) -> bool:
+        if not all(b.check_mirror() for b in self.bindings.values()):
+            return False
+        # plane-level: free + mapped rows exactly tile each plane (minus null)
+        for spec, plane in self.planes.items():
+            mapped = sum(len(b.row_of) for b in self.bindings.values()
+                         if b.plane is plane)
+            if mapped + len(plane.free_rows) != plane.n_rows - 1:
+                return False
+        return True

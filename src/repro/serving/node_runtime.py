@@ -23,6 +23,7 @@ from repro.core.runtime.residency import HierarchicalResidency, ModelState
 from repro.core.sched.fitness import NodeSignal
 from repro.models.transformer import Model
 from repro.serving.engine import Engine, Request
+from repro.serving.kv_arena import KVArena
 
 
 def _tree_bytes(tree) -> int:
@@ -33,7 +34,8 @@ class NodeRuntime:
     def __init__(self, node_id: int, cluster_id: int,
                  zoo: Dict[str, Model], host_params: Dict[str, Any],
                  hbm_budget: float = 2e9, max_slots: int = 4,
-                 s_max: int = 256, ctx_bytes: int = 8 << 20):
+                 s_max: int = 256, ctx_bytes: int = 8 << 20,
+                 page_tokens: int = 16):
         self.node_id = node_id
         self.cluster_id = cluster_id
         self.zoo = zoo
@@ -41,6 +43,9 @@ class NodeRuntime:
         self.device_params: Dict[str, Any] = {}
         self.engines: Dict[str, Engine] = {}
         self.acc = MemoryAccountant(m_total=hbm_budget, m_other=16 << 20)
+        # ONE physical paged-KV arena per node: every colocated engine's
+        # pool grants map onto it 1:1 (§III.C spatial multiplexing)
+        self.arena = KVArena(page_tokens=page_tokens)
         self.ctx_bytes = ctx_bytes
         self.max_slots = max_slots
         self.s_max = s_max
@@ -48,7 +53,10 @@ class NodeRuntime:
             name: ModelProfile(
                 name=name, weight_bytes=_tree_bytes(host_params[name]),
                 ctx_bytes=ctx_bytes,
-                alpha_bytes_per_token=m.cfg.kv_bytes_per_token(),
+                # dtype-aware: must match the engine pool's per-token charge
+                # (reduced smoke configs run f32, production configs bf16)
+                alpha_bytes_per_token=m.cfg.kv_bytes_per_token(
+                    dtype_bytes=jax.numpy.dtype(m.cfg.dtype).itemsize),
                 state_bytes=m.cfg.ssm_state_bytes(),
                 prefill_flops_per_token=2.0 * m.cfg.active_param_count(),
                 decode_bytes_per_token=2.0 * m.cfg.active_param_count(),
@@ -88,14 +96,21 @@ class NodeRuntime:
         if name not in self.engines:
             self.engines[name] = Engine(
                 self.zoo[name], self.device_params[name], self.acc,
-                max_slots=self.max_slots, s_max=self.s_max)
+                max_slots=self.max_slots, s_max=self.s_max,
+                arena=self.arena)
         else:
             self.engines[name].params = self.device_params[name]
         return time.perf_counter() - t0
 
     def _offload(self, name: str) -> None:
         """Device -> host (weights only; jit executable cache survives —
-        that is what makes re-activation cheap for Sleeping models)."""
+        that is what makes re-activation cheap for Sleeping models). The
+        engine's KV — arena pages, block tables and the dense state cache —
+        is freed and de-accounted here: an offloaded model holds no silent
+        device-resident KV (leak fix)."""
+        eng = self.engines.get(name)
+        if eng is not None:
+            eng.release_kv()
         self.device_params.pop(name, None)
         self.acc.unregister_weights(name)
         if self.residency.state[name] is ModelState.CPU:
@@ -143,6 +158,9 @@ class NodeRuntime:
         active = self._busy_models() | {model}
         floor = sum(self.profiles[m].weight_bytes + self.profiles[m].ctx_bytes
                     for m in active)
+        # in-flight engines also keep their dense state caches resident
+        floor += sum(e._state_bytes for m2, e in self.engines.items()
+                     if m2 in active)
         return (floor + self.acc.m_kv + self.acc.m_other + r_need
                 <= self.acc.m_total)
 
@@ -205,6 +223,17 @@ class NodeRuntime:
         return out
 
     # -------------------------------------------------------------- signals
+    def kv_overcommit_ratio(self) -> float:
+        """Live counterpart of Table V's overcommit: total virtual KV the
+        colocated engines advertise over the PEAK physical KV ever mapped in
+        the shared arena. > 1 means spatial multiplexing is really happening
+        (the engines together promise more KV than was ever resident).
+        0.0 until any KV was physically mapped (ratio undefined)."""
+        if self.arena.peak_mapped_bytes <= 0:
+            return 0.0
+        virt = sum(e.pool.virtual_total() for e in self.engines.values())
+        return virt / self.arena.peak_mapped_bytes
+
     def signal(self) -> NodeSignal:
         warm = {m: self.residency.activation_latency(m)
                 for m in self.residency.warm_set()}

@@ -62,6 +62,13 @@ class GatewayMetrics:
     throughput_stages_per_s: float
     min_headroom_bytes: float
     generated_tokens: int
+    # physical paged-KV arena (filled by the gateway post-run): worst-node
+    # virtual-over-peak-physical KV ratio, fleet-wide peak mapped pages and
+    # peak plane-row utilization
+    kv_overcommit_ratio: float = 0.0
+    arena_peak_pages: int = 0
+    arena_utilization: float = 0.0
+    truncated_stages: int = 0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)

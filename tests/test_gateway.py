@@ -72,6 +72,23 @@ def test_fcfs_policy_needs_no_predictor(zoo_host):
         ClusterGateway(fleet, RTT, policy="maestro")     # no predictor
 
 
+def test_oversized_prompt_truncated_at_dispatch(zoo_host):
+    """A prompt no engine window can hold finishes truncated at DISPATCH
+    time (no cold start, no transit wait) and its job keeps flowing."""
+    fleet = _fleet(zoo_host, [NodeSpec(0, max_slots=2, s_max=64)])
+    job = LiveJob(0, "t", True, 0.0, [   # t=0 arrival: hardest sentinel case
+        _stage(0, 0, [], True, tokens=list(range(64))),   # > s_max - 1
+        _stage(1, 0, [0], True),                          # dependent still runs
+    ])
+    gw = ClusterGateway(fleet, RTT, policy="fcfs")
+    m = gw.run([job])
+    assert m.truncated_stages == 1
+    assert m.finished_jobs == 1 and m.finished_stages == 2
+    assert gw.telemetry.events[0].out_len == 0            # truncated: no output
+    assert gw.telemetry.events[1].out_len >= 1
+    assert m.cold_starts <= 1                             # only the real stage
+
+
 def test_admission_rejection_under_tight_hbm(zoo_host):
     """A stage whose rho-margined R_need can never fit is rejected (counted)
     and its job eventually dropped — no OOM, no livelock."""

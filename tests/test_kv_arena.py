@@ -1,0 +1,151 @@
+"""Physical paged-KV arena: pool<->arena mirror invariants, plane sharing,
+geometric growth, and paged-vs-dense decode parity on real engines."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.runtime.accounting import MemoryAccountant
+from repro.core.runtime.kv_pool import VirtualKVPool
+from repro.models import build_model
+from repro.serving.engine import Engine, Request
+from repro.serving.kv_arena import NULL_ROW, KVArena
+
+GEO = dict(n_layers=2, n_kv_heads=2, head_dim=32, dtype="float32")
+ALPHA = 2 * 2 * 2 * 32 * 4          # bytes/token for GEO at f32
+
+
+def _bind(arena, acc, name="m"):
+    pool = VirtualKVPool(acc, page_bytes=ALPHA * arena.page_tokens,
+                         page_tokens=arena.page_tokens)
+    return arena.register(name, pool, s_max=256, **GEO)
+
+
+def test_every_grant_has_exactly_one_row():
+    acc = MemoryAccountant(m_total=4e6)
+    arena = KVArena(page_tokens=16)
+    b = _bind(arena, acc)
+    assert b.alloc_seq(0, "m", tokens=40)        # 3 pages
+    assert b.alloc_seq(1, "m", tokens=10)        # 1 page
+    rows = b.seq_rows(0) + b.seq_rows(1)
+    assert len(rows) == 4 and len(set(rows)) == 4
+    assert NULL_ROW not in rows
+    assert arena.check_mirror()
+    # on-demand growth maps fresh rows for the new pages only
+    assert b.ensure_tokens(0, 100)               # 3 -> 7 pages
+    assert len(b.seq_rows(0)) == 7
+    assert b.seq_rows(0)[:3] == rows[:3]         # existing pages keep rows
+    assert arena.check_mirror()
+
+
+def test_free_returns_pages_to_both_pool_and_plane():
+    acc = MemoryAccountant(m_total=4e6)
+    arena = KVArena(page_tokens=16)
+    b = _bind(arena, acc)
+    assert b.alloc_seq(0, "m", tokens=64)
+    assert acc.m_kv > 0 and arena.mapped_rows() > 0
+    b.free_seq(0)
+    assert not b.pool.seqs and not b.row_of
+    assert arena.mapped_pages() == 0 and arena.mapped_rows() == 0
+    assert acc.m_kv == pytest.approx(0.0)        # unmapped -> accountant
+    assert arena.check_mirror()
+
+
+def test_colocated_models_share_one_plane():
+    acc = MemoryAccountant(m_total=8e6)
+    arena = KVArena(page_tokens=16)
+    a = _bind(arena, acc, "model-a")
+    b = _bind(arena, acc, "model-b")
+    assert a.plane is b.plane                    # same geometry, one store
+    assert a.alloc_seq(0, "model-a", tokens=40)
+    assert b.alloc_seq(1, "model-b", tokens=40)
+    assert not set(a.seq_rows(0)) & set(b.seq_rows(1))
+    # a different geometry gets its own plane
+    pool = VirtualKVPool(acc, page_bytes=1024, page_tokens=16)
+    c = arena.register("model-c", pool, s_max=64, n_layers=4, n_kv_heads=1,
+                       head_dim=16, dtype="float32")
+    assert c.plane is not a.plane and len(arena.planes) == 2
+    assert arena.check_mirror()
+
+
+def test_mirror_invariant_under_random_churn():
+    rng = np.random.default_rng(7)
+    acc = MemoryAccountant(m_total=2e6)
+    arena = KVArena(page_tokens=16, init_rows=2)  # force plane growth
+    b = _bind(arena, acc)
+    live = []
+    sid = 0
+    for _ in range(200):
+        op = rng.integers(0, 3)
+        if op == 0:
+            if b.alloc_seq(sid, "m", tokens=int(rng.integers(1, 120))):
+                live.append(sid)
+            sid += 1
+        elif op == 1 and live:
+            b.ensure_tokens(rng.choice(live), int(rng.integers(1, 200)))
+        elif op == 2 and live:
+            live.remove(victim := rng.choice(live))
+            b.free_seq(int(victim))
+        assert arena.check_mirror()
+        assert acc.check_invariant()
+        assert acc.m_kv == b.pool.n_pages * b.pool.page_bytes
+    for s in live:
+        b.free_seq(s)
+    assert arena.mapped_pages() == 0 and acc.m_kv == pytest.approx(0.0)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("qwen3-8b").reduced()
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _run(m, params, kv_backend, prompts, max_new=6, s_max=64):
+    eng = Engine(m, params, MemoryAccountant(m_total=256e6), max_slots=2,
+                 s_max=s_max, kv_backend=kv_backend)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(req_id=i, tokens=list(p), max_new=max_new))
+    out = {r.req_id: r.out for r in eng.drain()}
+    return eng, out
+
+
+def test_paged_decode_matches_dense_token_for_token(tiny):
+    cfg, m, params = tiny
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, int(n)) for n in (8, 5, 17, 11)]
+    _, dense = _run(m, params, "dense", prompts)
+    eng, paged = _run(m, params, "ref", prompts)
+    assert eng.paged and eng.kv_backend == "ref"
+    assert paged == dense
+    assert eng.arena.check_mirror()
+    assert eng.arena.mapped_pages() == 0          # drained -> all reclaimed
+
+
+def test_engine_eviction_returns_pages_to_pool_and_arena(tiny):
+    cfg, m, params = tiny
+    eng = Engine(m, params, MemoryAccountant(m_total=256e6), max_slots=2,
+                 s_max=64)
+    eng.submit(Request(req_id=0, tokens=[1, 2, 3, 4], max_new=32))
+    eng.step()
+    assert eng.arena.mapped_pages() > 0
+    req = eng.evict(0)
+    assert req is not None and req.out == []
+    assert eng.arena.mapped_pages() == 0 and eng.arena.mapped_rows() == 0
+    assert eng.acc.m_kv == pytest.approx(0.0)
+    assert eng.arena.check_mirror()
+
+
+def test_hybrid_engine_pages_attn_and_keeps_ssm_state():
+    cfg = get_config("jamba-v0.1-52b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    _, n_layers, _, _, _ = m.paged_kv_layout()
+    assert 0 < n_layers < cfg.n_layers            # truly hybrid
+    eng, out = _run(m, params, None, [[5, 6, 7], [9, 8, 7, 6]], max_new=4)
+    assert eng.paged
+    assert all(len(o) >= 4 for o in out.values())
+    structs, _ = m.state_cache_specs(2, 64)
+    assert structs                                # SSM state stayed dense
+    assert all("k" not in entry for entry in structs.values())
+    assert eng.arena.check_mirror()

@@ -7,7 +7,7 @@ import pytest
 from repro.configs import get_config
 from repro.core.runtime.accounting import MemoryAccountant
 from repro.models import build_model
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine, PromptTooLongError, Request
 from repro.serving.node_runtime import NodeRuntime
 
 
@@ -66,6 +66,73 @@ def test_engine_backpressure(tiny_model):
     done = eng.drain()
     assert len(done) == 6           # eventually everyone runs
     assert acc.check_invariant()
+
+
+def test_prompt_longer_than_window_rejected_typed(tiny_model):
+    """Prompts that cannot fit s_max raise at submit() instead of silently
+    overflowing the prefill write."""
+    cfg, m, params = tiny_model
+    eng = Engine(m, params, MemoryAccountant(m_total=256e6), max_slots=2,
+                 s_max=16)
+    with pytest.raises(PromptTooLongError):
+        eng.submit(Request(req_id=0, tokens=list(range(16)), max_new=4))
+    eng.submit(Request(req_id=1, tokens=list(range(15)), max_new=4))
+    assert len(eng.drain()) == 1                 # boundary prompt still runs
+
+
+def test_release_observes_the_admitted_reservation(tiny_model):
+    """rho.observe must be fed the R_need admission charged, not a value
+    recomputed after earlier releases already moved the shared estimator."""
+    cfg, m, params = tiny_model
+    eng = Engine(m, params, MemoryAccountant(m_total=256e6), max_slots=1,
+                 s_max=64)
+    needs, observed = [], []
+    orig_need, orig_obs = eng.rho.r_need, eng.rho.observe
+    eng.rho.r_need = lambda x: needs.append(orig_need(x)) or needs[-1]
+    eng.rho.observe = \
+        lambda a, r: observed.append(r) or orig_obs(a, r)
+    rng = np.random.default_rng(1)
+    for i in range(10):      # pred_len << actual so rho moves mid-stream
+        eng.submit(Request(req_id=i, tokens=list(rng.integers(0, 64, 6)),
+                           max_new=8, pred_len=1.0))
+    eng.drain()
+    assert len(needs) == 10                      # r_need at admission ONLY
+    assert eng.rho.rho > eng.rho.lo              # estimator really moved
+    for got, want in zip(observed, needs):
+        assert got == pytest.approx(want)
+
+
+def test_sleep_frees_engine_kv_and_recovers_headroom():
+    """Regression for the sleep leak: offloading a model must free its arena
+    pages AND its dense state cache, and the accountant must reflect it."""
+    zoo, host = {}, {}
+    for name in ("qwen3-8b", "mamba2-2.7b"):
+        c = get_config(name).reduced()
+        mm = build_model(c)
+        zoo[name] = mm
+        host[name] = jax.tree.map(np.asarray, mm.init(jax.random.PRNGKey(2)))
+    node = NodeRuntime(0, 0, zoo, host, hbm_budget=1e9, max_slots=2, s_max=48)
+    node.activate("mamba2-2.7b")
+    node.submit("mamba2-2.7b", Request(req_id=0, tokens=[3, 4, 5], max_new=4))
+    node.step()                                  # admitted + decoding
+    eng = node.engines["mamba2-2.7b"]
+    assert eng._state_bytes > 0                  # SSM state is accounted
+    assert eng.pool.n_pages > 0
+    h_active = node.acc.headroom
+    node.sleep("mamba2-2.7b")
+    recovered = node.acc.headroom - h_active
+    weights = node.profiles["mamba2-2.7b"].weight_bytes
+    assert recovered >= weights                  # weights AND KV came back
+    assert eng._state_bytes == 0 and eng.cache is None
+    assert node.arena.mapped_pages() == 0
+    assert eng.waiting                           # in-flight work requeued
+    # self-heal: step() reactivates and the requeued request completes
+    out = {}
+    for _ in range(30):
+        for mdl, reqs in node.step().items():
+            out.setdefault(mdl, []).extend(reqs)
+    assert len(out.get("mamba2-2.7b", [])) == 1
+    assert len(out["mamba2-2.7b"][0].out) >= 4
 
 
 def test_node_runtime_colocation_and_warm_reactivation():
