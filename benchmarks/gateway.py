@@ -19,13 +19,8 @@ from benchmarks.common import banner, get_predictor, get_trace
 from repro.core.sched.policies import registered_policies
 from repro.serving.cluster import (ClusterSpec, NodeSpec, build_fleet,
                                    build_zoo, jobs_from_trace)
-from repro.serving.gateway import ClusterGateway
-
-COLS = ("policy", "slo_attainment", "interactive_queue_delay_s",
-        "p95_latency_s", "throughput_stages_per_s", "cold_starts",
-        "preemptions", "finished_jobs", "kv_overcommit_ratio",
-        "arena_peak_pages", "arena_utilization")
-
+from repro.serving.gateway import ClusterGateway, GatewayConfig
+from repro.serving.worker import close_fleet
 
 def _spec() -> ClusterSpec:
     # 4 real nodes over 3 clusters (two same-region, one remote)
@@ -36,22 +31,33 @@ def _spec() -> ClusterSpec:
 
 
 def main(n_jobs: int = 240, rate: float = 2.0, fast: bool = False,
-         seed: int = 13, policies: Optional[Sequence[str]] = None) -> Dict:
-    banner(f"gateway: live cross-cluster serving ({n_jobs} jobs)")
+         seed: int = 13, policies: Optional[Sequence[str]] = None,
+         backend: str = "inproc") -> Dict:
+    banner(f"gateway: live cross-cluster serving ({n_jobs} jobs, "
+           f"{backend} nodes)")
     names = tuple(policies) if policies else registered_policies()
     pred = get_predictor(n_jobs=800 if fast else 1500, fast=fast)
     spec = _spec()
-    zoo, host = build_zoo(spec.model_names)
+    # worker processes build their own zoos; only the in-process fleet
+    # shares one host-tier parameter registry across policies
+    zoo, host = (None, None) if backend == "process" \
+        else build_zoo(spec.model_names)
     trace = get_trace(n_jobs, seed=seed, rate=rate)
     n_clusters = spec.rtt_s.shape[0]
 
     rows: List[Dict] = []
     for policy in names:
-        fleet = build_fleet(spec, zoo=zoo, host=host)
+        fleet = build_fleet(spec, zoo=zoo, host=host, backend=backend)
         jobs = jobs_from_trace(trace, n_clusters=n_clusters, seed=seed)
         t0 = time.time()
-        gw = ClusterGateway(fleet, spec.rtt_s, predictor=pred, policy=policy)
-        m = gw.run(jobs)
+        try:
+            gw = ClusterGateway(fleet, spec.rtt_s, predictor=pred,
+                                policy=policy,
+                                cfg=GatewayConfig(node_backend=backend))
+            m = gw.run(jobs)
+        finally:
+            # handles, not the gateway: covers constructor failures too
+            close_fleet(fleet)
         wall = time.time() - t0
         assert m.finished_jobs > 0, f"{policy}: no jobs finished live"
         # every colocated engine drew its KV from one shared physical arena,
@@ -59,10 +65,20 @@ def main(n_jobs: int = 240, rate: float = 2.0, fast: bool = False,
         # physically mapped (§III.C spatial multiplexing, live)
         assert m.kv_overcommit_ratio > 1.0, \
             f"{policy}: arena not overcommitted ({m.kv_overcommit_ratio})"
+        if backend == "process":
+            # workers really spawned and exercised: every node did engine
+            # work in its own process (ipc_calls alone would be vacuous —
+            # metrics() itself costs one kv_stats round trip per node)
+            assert m.ipc_calls > 0 and all(
+                w["worker_step_wall_s"] > 0
+                for w in m.worker_stats.values()), \
+                f"{policy}: worker counters empty ({m.worker_stats})"
         row = m.row()
         row["wall_s"] = round(wall, 1)
         row["virtual_s"] = round(gw.now, 2)
         rows.append(row)
+        ipc = (f"ipc={m.ipc_calls} ({m.ipc_wall_s:.1f}s) "
+               if backend == "process" else "")
         print(f"[gateway] {policy:>13}: slo={m.slo_attainment:.2f} "
               f"int_qd={m.interactive_queue_delay_s:.2f}s "
               f"p95={m.p95_latency_s:.2f}s "
@@ -70,7 +86,7 @@ def main(n_jobs: int = 240, rate: float = 2.0, fast: bool = False,
               f"cold={m.cold_starts} preempt={m.preemptions} "
               f"fin={m.finished_jobs}/{n_jobs} "
               f"kv_oc={m.kv_overcommit_ratio:.1f}x "
-              f"pages={m.arena_peak_pages} ({wall:.0f}s wall)")
+              f"pages={m.arena_peak_pages} {ipc}({wall:.0f}s wall)")
 
     by = {r["policy"]: r for r in rows}
     payload = {
@@ -79,6 +95,7 @@ def main(n_jobs: int = 240, rate: float = 2.0, fast: bool = False,
         "rate_jobs_per_s": rate,
         "nodes": len(spec.nodes),
         "clusters": spec.n_clusters,
+        "node_backend": backend,
         "zoo": list(spec.model_names),
         "policies": list(names),
         "rows": rows,

@@ -4,6 +4,8 @@
   python -m benchmarks.run --fast       # reduced sizes (CI / smoke)
   python -m benchmarks.run --smoke      # tiny sizes, subset policies (CI)
   python -m benchmarks.run --only table5_memory fig10_activation
+  python -m benchmarks.run --smoke --only gateway --backend process
+                                        # live gateway on worker processes
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ BENCHES = {}
 SMOKE_POLICIES = ("fcfs", "maestro")
 
 
-def _register(mode: str) -> None:
+def _register(mode: str, backend: str = "inproc") -> None:
     from benchmarks import (activation, colocation, fitness, gateway, kernels,
                             memory, prediction, preemption, scheduling)
     fast = mode != "full"
@@ -26,7 +28,7 @@ def _register(mode: str) -> None:
     BENCHES.update({
         "gateway": lambda: gateway.main(
             n_jobs={"full": 240, "fast": 24, "smoke": 5}[mode], fast=fast,
-            policies=SMOKE_POLICIES if smoke else None),
+            policies=SMOKE_POLICIES if smoke else None, backend=backend),
         "table3_6_7_prediction": lambda: prediction.main(
             n_jobs=800 if fast else 2500),
         "fig7_scheduling": lambda: scheduling.main(
@@ -49,9 +51,13 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes + policy subset (CI entry-point check)")
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--backend", choices=("inproc", "process"),
+                    default="inproc",
+                    help="gateway node backend: cooperative in-process "
+                         "runtimes (default) or one worker process per node")
     args = ap.parse_args()
     mode = "smoke" if args.smoke else "fast" if args.fast else "full"
-    _register(mode)
+    _register(mode, backend=args.backend)
     names = args.only or list(BENCHES)
     failures = []
     t_all = time.time()
@@ -61,10 +67,16 @@ def main() -> None:
             payload = BENCHES[name]()
             if payload is not None:
                 # machine-readable perf record (e.g. BENCH_gateway.json) so
-                # the trajectory is trackable across PRs
+                # the trajectory is trackable across PRs; non-default node
+                # backends get their own file (BENCH_gateway_process.json)
+                # so they never clobber the in-process baseline record
                 from benchmarks.common import save_result
+                suffix = ""
+                if (isinstance(payload, dict)
+                        and payload.get("node_backend", "inproc") != "inproc"):
+                    suffix = f"_{payload['node_backend']}"
                 try:
-                    save_result(f"BENCH_{name}", payload)
+                    save_result(f"BENCH_{name}{suffix}", payload)
                 except TypeError as e:   # non-JSON payload: keep bench green
                     print(f"[run] {name}: payload not serializable ({e})")
             print(f"[run] {name} OK ({time.time()-t0:.0f}s)")

@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""CI docs check: every file under docs/ must be REACHABLE from the README.
+
+The README is the repo's front door; a doc nobody links is a doc nobody
+finds. Reachability is transitive: a file linked from a doc that is itself
+reachable counts (so docs/ can grow sub-pages and figures without forcing
+a README link for each). A link counts when the target's repo-relative
+path, or its path relative to the linking document's directory, appears in
+the document text. Fails (exit 1) listing any unreachable docs/ file.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _text(path: pathlib.Path) -> str:
+    try:
+        return path.read_text(encoding="utf-8")
+    except (UnicodeDecodeError, OSError):
+        return ""            # binary assets link TO nothing
+
+
+def main() -> int:
+    docs = sorted(p for p in (ROOT / "docs").rglob("*") if p.is_file())
+    if not docs:
+        print("check_docs_links: no files under docs/ — nothing to check")
+        return 0
+    # BFS from README.md: each newly reached doc's text can link further
+    sources = [(ROOT, _text(ROOT / "README.md"))]
+    unreached = set(docs)
+    progress = True
+    while progress and unreached:
+        progress = False
+        for p in sorted(unreached):
+            rel_repo = str(p.relative_to(ROOT))
+            if any(rel_repo in text
+                   or os.path.relpath(p, src_dir) in text
+                   for src_dir, text in sources):
+                unreached.discard(p)
+                sources.append((p.parent, _text(p)))
+                progress = True
+    if unreached:
+        print("check_docs_links: files under docs/ not reachable from "
+              "README.md:")
+        for p in sorted(unreached):
+            print(f"  - {p.relative_to(ROOT)}")
+        return 1
+    print(f"check_docs_links: OK ({len(docs)} docs file(s) all reachable "
+          "from README.md)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

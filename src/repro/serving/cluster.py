@@ -66,9 +66,26 @@ def build_zoo(model_names: Sequence[str] = DEFAULT_ZOO, seed: int = 1
 def build_fleet(spec: Optional[ClusterSpec] = None,
                 zoo: Optional[Dict[str, Any]] = None,
                 host: Optional[Dict[str, Any]] = None,
-                seed: int = 1) -> List[NodeRuntime]:
-    """Instantiate the fleet; node ids are positional."""
+                seed: int = 1, backend: str = "inproc") -> List[Any]:
+    """Instantiate the fleet; node ids are positional.
+
+    ``backend="inproc"`` (default) returns in-process ``NodeRuntime``
+    objects; ``backend="process"`` spawns one worker process per node and
+    returns ``NodeHandle`` proxies (each child builds its own zoo from the
+    same ``model_names`` + ``seed``, so the fleets are numerically
+    identical — ``zoo``/``host`` are ignored there)."""
     spec = spec or ClusterSpec()
+    if backend == "process":
+        from repro.serving.worker import WorkerSpec, spawn_fleet
+        return spawn_fleet([
+            WorkerSpec(node_id=nid, cluster_id=ns.cluster_id,
+                       model_names=tuple(spec.model_names),
+                       hbm_budget=ns.hbm_budget, max_slots=ns.max_slots,
+                       s_max=ns.s_max, seed=seed)
+            for nid, ns in enumerate(spec.nodes)])
+    if backend != "inproc":
+        raise ValueError(f"unknown node backend {backend!r} "
+                         "(expected 'inproc' or 'process')")
     if zoo is None or host is None:
         zoo, host = build_zoo(spec.model_names, seed=seed)
     fleet = []

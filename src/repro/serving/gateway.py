@@ -46,6 +46,7 @@ from repro.serving.cluster import LiveJob, LiveStage
 from repro.serving.engine import PromptTooLongError, Request
 from repro.serving.node_runtime import NodeRuntime
 from repro.serving.telemetry import GatewayMetrics, Telemetry
+from repro.serving.worker import close_fleet
 
 COLD_START_THRESHOLD_S = 0.01
 
@@ -62,6 +63,12 @@ class GatewayConfig:
     preempt_cooldown_ticks: float = 10.0
     refresh_every: int = 8             # aging refresh period (ticks)
     headroom_sample_every: int = 10
+    # "inproc": nodes are NodeRuntime objects cooperatively stepped inside
+    # the gateway process (deterministic default — tests and the virtual
+    # clock depend on it). "process": nodes are worker.NodeHandle proxies,
+    # one OS process per node; one tick broadcasts step to every worker so
+    # engine iterations genuinely overlap across processes.
+    node_backend: str = "inproc"
 
 
 @dataclasses.dataclass
@@ -83,6 +90,20 @@ class ClusterGateway:
                  cfg: Optional[GatewayConfig] = None,
                  telemetry: Optional[Telemetry] = None):
         self.cfg = cfg or GatewayConfig()
+        if self.cfg.node_backend not in ("inproc", "process"):
+            raise ValueError(f"unknown node_backend "
+                             f"{self.cfg.node_backend!r}")
+        # a fleet of worker handles implies the process backend even when
+        # the config was left at its default; the reverse mismatch is a
+        # hard error (an in-process runtime cannot be stepped remotely)
+        is_proc_fleet = bool(fleet) and all(hasattr(n, "step_send")
+                                            for n in fleet)
+        if self.cfg.node_backend == "process" and not is_proc_fleet:
+            raise ValueError(
+                "node_backend='process' requires worker NodeHandles — "
+                "build the fleet with build_fleet(spec, backend='process')")
+        self.node_backend = "process" if is_proc_fleet \
+            else self.cfg.node_backend
         self.fleet: Dict[int, NodeRuntime] = {n.node_id: n for n in fleet}
         self.rtt_s = validate_rtt(rtt_s)
         self.profiles = {name: p
@@ -299,16 +320,32 @@ class ClusterGateway:
         m = self.telemetry.summary(
             self.policy.name, list(self.jobs.values()), self.job_finish,
             self.cfg.interactive_budget_s, self.now)
-        # physical paged-KV arena: worst-node overcommit + fleet peaks
+        # physical paged-KV arena: worst-node overcommit + fleet peaks —
+        # kv_stats() is one round trip per node on the process backend
+        stats = [n.kv_stats() for n in self.fleet.values()]
         m.kv_overcommit_ratio = max(
-            (n.kv_overcommit_ratio() for n in self.fleet.values()
-             if n.engines), default=0.0)
-        m.arena_peak_pages = sum(n.arena.peak_mapped_pages
-                                 for n in self.fleet.values())
+            (s["kv_overcommit_ratio"] for s in stats if s["n_engines"]),
+            default=0.0)
+        m.arena_peak_pages = sum(s["arena_peak_pages"] for s in stats)
         m.arena_utilization = max(
-            (n.arena.utilization() for n in self.fleet.values()), default=0.0)
+            (s["arena_utilization"] for s in stats), default=0.0)
         m.truncated_stages = self._truncated
+        m.node_backend = self.node_backend
+        if self.node_backend == "process":
+            for nid, node in self.fleet.items():
+                self.telemetry.record_worker(nid, node.worker_stats())
+            m.worker_stats = dict(self.telemetry.worker_stats)
+            m.ipc_calls = sum(int(w["ipc_calls"])
+                              for w in m.worker_stats.values())
+            m.ipc_wall_s = sum(w["ipc_wall_s"]
+                               for w in m.worker_stats.values())
+            m.worker_step_wall_s = sum(w["worker_step_wall_s"]
+                                       for w in m.worker_stats.values())
         return m
+
+    def close(self) -> None:
+        """Shut worker processes down (no-op for the in-process backend)."""
+        close_fleet(self.fleet.values())
 
     def step(self) -> None:
         now = self.now
@@ -325,9 +362,18 @@ class ClusterGateway:
         self._dispatch(now)
         # 4) stages whose rtt + activation virtual delay elapsed hit engines
         self._flush_submissions(now)
-        # 5) one real iteration of every busy engine
+        # 5) one real iteration of every busy engine. Process backend:
+        # broadcast the step to all workers first so node iterations run
+        # concurrently, then collect replies in node order — same
+        # per-node event order as the cooperative in-process loop, so the
+        # virtual-clock outcome is identical (tests/test_worker.py parity)
+        if self.node_backend == "process":
+            for node in self.fleet.values():
+                node.step_send()
         for nid, node in self.fleet.items():
-            for model, reqs in node.step().items():
+            out = (node.step_recv() if self.node_backend == "process"
+                   else node.step())
+            for model, reqs in out.items():
                 for req in reqs:
                     self._on_finish(req, now)
         # 6) telemetry sampling
@@ -486,6 +532,15 @@ class ClusterGateway:
                     self._mark_ready(st, now)
 
     # ---------------------------------------------------------- preemption
+    def _decode_progress(self, rec: _InFlight) -> int:
+        """Tokens the in-flight stage has produced so far. In-process the
+        engine mutates the gateway's own Request; a worker process mutates a
+        pickled copy, so the handle's last-step progress snapshot stands in
+        — both observe the same engine-step boundary on the virtual clock."""
+        if self.node_backend == "process" and rec.submitted:
+            return self.fleet[rec.node_id].out_len(rec.req.req_id)
+        return len(rec.req.out)
+
     def _try_preempt(self, stage: LiveStage, now: float) -> bool:
         """Boundary preemption: evict a batch stage between engine steps so
         an infeasible interactive head can place. The policy decides
@@ -493,10 +548,10 @@ class ClusterGateway:
         cand = self.view(stage)
         victims = sorted(
             (r for r in self.inflight.values() if not r.stage.interactive),
-            key=lambda r: -(r.stage.max_new - len(r.req.out)))
+            key=lambda r: -(r.stage.max_new - self._decode_progress(r)))
         for rec in victims:
             remaining_v = self.cfg.tick_s * max(
-                1.0, 1.0 + rec.stage.max_new - len(rec.req.out))
+                1.0, 1.0 + rec.stage.max_new - self._decode_progress(rec))
             if not self.policy.should_preempt(self, self.view(rec.stage),
                                               remaining_v, cand, now):
                 continue
@@ -528,3 +583,8 @@ class ClusterGateway:
         for s in self.jobs[job_id].stages:
             if s.stage_id not in self.done:
                 self._q_discard(s.stage_id)
+                # also clear the readiness bookkeeping: a dropped job's
+                # stages must not linger as orphan ids in ready_since (the
+                # aging input policies read) or in the reject counters
+                self.ready_t.pop(s.stage_id, None)
+                self._rejects.pop(s.stage_id, None)

@@ -234,6 +234,15 @@ class NodeRuntime:
         virt = sum(e.pool.virtual_total() for e in self.engines.values())
         return virt / self.arena.peak_mapped_bytes
 
+    def kv_stats(self) -> Dict[str, float]:
+        """Arena/overcommit snapshot consumed by gateway end-of-run metrics
+        — one picklable dict so worker processes report it in a single
+        round trip."""
+        return {"n_engines": len(self.engines),
+                "kv_overcommit_ratio": self.kv_overcommit_ratio(),
+                "arena_peak_pages": int(self.arena.peak_mapped_pages),
+                "arena_utilization": float(self.arena.utilization())}
+
     def signal(self) -> NodeSignal:
         warm = {m: self.residency.activation_latency(m)
                 for m in self.residency.warm_set()}

@@ -69,6 +69,19 @@ class GatewayMetrics:
     arena_peak_pages: int = 0
     arena_utilization: float = 0.0
     truncated_stages: int = 0
+    # node backend that produced this row ("inproc" = cooperative stepping
+    # inside the gateway process, "process" = one worker process per node)
+    # plus the aggregate worker counters: IPC round trips, wall spent on
+    # pipe/pickle overhead (engine compute inside step round trips is
+    # excluded — that is worker_step_wall_s), and the worker-measured step
+    # wall-clock; per-node breakdown in worker_stats (all zero/empty for
+    # the in-process backend)
+    node_backend: str = "inproc"
+    ipc_calls: int = 0
+    ipc_wall_s: float = 0.0
+    worker_step_wall_s: float = 0.0
+    worker_stats: Dict[int, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -84,6 +97,9 @@ class Telemetry:
         self.preemptions = 0
         self.admission_rejections = 0
         self.dropped_jobs = 0
+        # per-node worker-process counters (process backend only): IPC round
+        # trips, pipe/pickle overhead wall, worker-measured step wall-clock
+        self.worker_stats: Dict[int, Dict[str, float]] = {}
 
     # ------------------------------------------------------------- recording
     def event(self, stage_id: int, job_id: int, interactive: bool) -> StageEvent:
@@ -96,6 +112,10 @@ class Telemetry:
 
     def sample_headroom(self, node_id: int, headroom: float) -> None:
         self.headroom.setdefault(node_id, []).append(float(headroom))
+
+    def record_worker(self, node_id: int, stats: Dict[str, float]) -> None:
+        """End-of-run snapshot of one worker handle's IPC/wall counters."""
+        self.worker_stats[node_id] = dict(stats)
 
     # ------------------------------------------------------------ aggregation
     def summary(self, policy: str, jobs, job_finish: Dict[int, float],

@@ -1,0 +1,392 @@
+"""Multi-process node runtimes: one OS process per ``NodeRuntime``.
+
+The in-process gateway cooperatively steps every node inside its own
+interpreter, so cross-node overlap is emulated, not real. This module moves
+each node into a child process and gives the gateway a :class:`NodeHandle`
+proxy that speaks a small request/reply protocol over ``multiprocessing``
+pipes — submit / step / poll-finished / make_room / signal snapshots plus
+the admission and routing estimates the Substrate protocol needs. The
+handle implements the exact node-facing surface ``ClusterGateway`` consumes
+(``signal`` / ``can_admit`` / ``t_act`` / ``degradation_cost`` / ``submit``
+/ ``preempt`` / ``step`` / ``acc.headroom`` / ``kv_stats``), so the
+gateway's dispatch change is a thin backend switch, not a rewrite.
+
+Design points:
+
+- Children are SPAWNED (never forked): each worker re-imports JAX fresh and
+  builds its own model zoo + ``NodeRuntime`` from a picklable
+  :class:`WorkerSpec`; jitted executables and device buffers never cross
+  the pipe. Only plain data does (``Request`` objects, ``NodeSignal``
+  snapshots, float estimates).
+- ``step`` replies carry (finished requests, per-request decode progress,
+  measured worker wall-clock). Progress lets the gateway's boundary
+  preemption rank victims exactly as it does in-process, where it can read
+  ``req.out`` directly.
+- The handle counts every round trip (``ipc_calls``, ``ipc_wall_s``) and
+  accumulates the worker-reported step wall-clock (``worker_step_wall_s``)
+  — the per-node IPC-overhead counters surfaced through gateway telemetry.
+- Determinism: the protocol is synchronous request/reply per node, and the
+  gateway collects step replies in node order, so a "process" run under the
+  deterministic virtual clock reproduces the in-process completion sets and
+  metrics bit-for-bit (see ``tests/test_worker.py``). Scope of that
+  guarantee: it holds for every policy in the registry, none of which reads
+  node state from ``priority``/``on_finish``. A custom policy that issues a
+  node read (e.g. ``sub.signal``) while the gateway is draining the tick's
+  step replies observes POST-step state here (the worker already executed
+  the broadcast step) but pre-step state in-process — that window is the
+  price of real concurrency; keep node reads inside ``route``/``reservation``
+  (which run before the broadcast) to stay backend-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import time
+import traceback
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.engine import PromptTooLongError, Request
+
+_SHUTDOWN_TIMEOUT_S = 5.0
+
+
+@dataclasses.dataclass
+class WorkerSpec:
+    """Everything a child needs to rebuild its node — plain picklable data.
+
+    The child constructs its own zoo/host trees from ``model_names`` +
+    ``seed`` (same deterministic init path as ``cluster.build_zoo``), so a
+    worker node is numerically identical to the in-process node the same
+    spec would build."""
+    node_id: int
+    cluster_id: int
+    model_names: Tuple[str, ...]
+    # None = use NodeRuntime's own defaults, so the two backends cannot
+    # silently drift if those defaults change
+    hbm_budget: Optional[float] = None
+    max_slots: Optional[int] = None
+    s_max: Optional[int] = None
+    ctx_bytes: Optional[int] = None
+    page_tokens: Optional[int] = None
+    seed: int = 1
+
+
+def _worker_main(conn, spec: WorkerSpec) -> None:
+    """Child entry point: build the runtime, then serve the request loop.
+
+    Heavy imports happen here, inside the spawned interpreter — the parent
+    never ships device state. Every post-boot reply is ``(kind, payload,
+    compute_wall_s)`` with kind in {"ok", "prompt_too_long", "err"};
+    ``compute_wall_s`` is the child-measured time spent executing the
+    method, so the parent can charge only the residual (pipe + pickle) to
+    its IPC-overhead counter. Boot replies are ``("ready"|"boot_error",
+    payload)``."""
+    try:
+        from repro.serving.cluster import build_zoo
+        from repro.serving.node_runtime import NodeRuntime
+        zoo, host = build_zoo(spec.model_names, seed=spec.seed)
+        kw = {k: v for k, v in (("hbm_budget", spec.hbm_budget),
+                                ("max_slots", spec.max_slots),
+                                ("s_max", spec.s_max),
+                                ("ctx_bytes", spec.ctx_bytes),
+                                ("page_tokens", spec.page_tokens))
+              if v is not None}
+        node = NodeRuntime(spec.node_id, spec.cluster_id, zoo, host, **kw)
+        conn.send(("ready", {"profiles": node.profiles,
+                             "max_slots": node.max_slots,
+                             "s_max": node.s_max}))
+    except Exception:
+        conn.send(("boot_error", traceback.format_exc()))
+        return
+    while True:
+        try:
+            method, args = conn.recv()
+        except (EOFError, KeyboardInterrupt):
+            break
+        if method == "shutdown":
+            conn.send(("ok", None, 0.0))
+            break
+        t0 = time.perf_counter()
+        try:
+            if method == "step":
+                out = node.step()
+                progress = {rid: len(r.out)
+                            for eng in node.engines.values()
+                            for rid, r in eng.active.items()}
+                payload = (out, progress)
+            elif method == "headroom":
+                payload = node.acc.headroom
+            elif method == "acc_can_admit":
+                payload = node.acc.can_admit(*args)
+            else:
+                # signal / can_admit / t_act / degradation_cost / make_room
+                # / submit / preempt / activate / sleep / kv_stats
+                payload = getattr(node, method)(*args)
+            conn.send(("ok", payload, time.perf_counter() - t0))
+        except PromptTooLongError as e:
+            conn.send(("prompt_too_long", str(e),
+                       time.perf_counter() - t0))
+        except Exception:
+            conn.send(("err", traceback.format_exc(),
+                       time.perf_counter() - t0))
+
+
+class _AccProxy:
+    """The two accountant reads the gateway makes (`headroom` for telemetry
+    sampling, `can_admit` for the submit-time make_room check), forwarded to
+    the worker's real ``MemoryAccountant``."""
+
+    def __init__(self, handle: "NodeHandle"):
+        self._h = handle
+
+    @property
+    def headroom(self) -> float:
+        return self._h._call("headroom")
+
+    def can_admit(self, r_need: float) -> bool:
+        return self._h._call("acc_can_admit", r_need)
+
+
+class NodeHandle:
+    """Gateway-side proxy for one worker process hosting a ``NodeRuntime``.
+
+    Synchronous surface mirrors the runtime 1:1; ``step_send``/``step_recv``
+    split the step round trip so the gateway can broadcast one tick to every
+    worker and let the engine iterations genuinely overlap across processes
+    before collecting replies in deterministic node order."""
+
+    backend = "process"
+
+    def __init__(self, spec: WorkerSpec, ctx=None):
+        ctx = ctx or mp.get_context("spawn")
+        self.spec = spec
+        self.node_id = spec.node_id
+        self.cluster_id = spec.cluster_id
+        self._conn, child = ctx.Pipe()
+        self.proc = ctx.Process(target=_worker_main, args=(child, spec),
+                                name=f"maestro-node-{spec.node_id}",
+                                daemon=True)
+        self.proc.start()
+        child.close()
+        self._ready = False
+        # IPC-overhead + worker wall-clock counters (gateway telemetry)
+        self.ipc_calls = 0
+        self.ipc_wall_s = 0.0
+        self.worker_step_wall_s = 0.0
+        self.acc = _AccProxy(self)
+        self.profiles: Dict[str, Any] = {}
+        self.max_slots = spec.max_slots
+        self.s_max = spec.s_max
+        self._inflight = 0            # submitted minus finished/preempted
+        self._progress: Dict[int, int] = {}
+        self._step_pending = False
+        self._step_buffer: Optional[Dict[str, List[Request]]] = None
+
+    # ------------------------------------------------------------- lifecycle
+    def wait_ready(self) -> "NodeHandle":
+        """Block until the child built its runtime (spawn boots in parallel
+        across a fleet: start all handles first, then wait on each)."""
+        if self._ready:
+            return self
+        try:
+            kind, payload = self._conn.recv()
+        except EOFError:
+            self.close()
+            raise RuntimeError(
+                f"node {self.node_id} worker died during boot "
+                f"(exitcode={self.proc.exitcode}); note: spawn re-imports "
+                f"the parent __main__, which must be an importable file")
+        if kind != "ready":
+            self.close()
+            raise RuntimeError(
+                f"node {self.node_id} worker failed to boot:\n{payload}")
+        self.profiles = payload["profiles"]
+        self.max_slots = payload["max_slots"]
+        self.s_max = payload["s_max"]
+        self._ready = True
+        return self
+
+    def close(self) -> None:
+        if self.proc.is_alive():
+            try:
+                self._conn.send(("shutdown", ()))
+                if self._conn.poll(_SHUTDOWN_TIMEOUT_S):
+                    self._conn.recv()
+            except (BrokenPipeError, EOFError, OSError):
+                pass
+        self.proc.join(timeout=_SHUTDOWN_TIMEOUT_S)
+        if self.proc.is_alive():
+            self.proc.terminate()
+            self.proc.join(timeout=_SHUTDOWN_TIMEOUT_S)
+        self._conn.close()
+
+    def __del__(self):  # best-effort: never leak a worker
+        try:
+            if getattr(self, "proc", None) is not None and self.proc.is_alive():
+                self.proc.terminate()
+        except Exception:
+            pass
+
+    # -------------------------------------------------------------- protocol
+    def _call(self, method: str, *args):
+        self.wait_ready()
+        if self._step_pending:
+            # a synchronous call while a step reply is in flight (e.g. a
+            # custom policy reading signal() from an on_finish hook): collect
+            # and buffer the step payload first so replies cannot mis-pair
+            self._step_buffer = self._recv_step()
+        t0 = time.perf_counter()
+        self._send(method, args)
+        kind, payload, compute_wall = self._recv(method)
+        self.ipc_calls += 1
+        # only the residual over the child-measured method execution is IPC
+        # overhead — a submit that pays a real activation (device_put of
+        # weights) must not read as pipe/pickle cost
+        self.ipc_wall_s += max(0.0,
+                               time.perf_counter() - t0 - compute_wall)
+        if kind == "prompt_too_long":
+            raise PromptTooLongError(payload)
+        if kind != "ok":
+            raise RuntimeError(
+                f"node {self.node_id} worker error in {method}:\n{payload}")
+        return payload
+
+    # -------------------------------------------- node surface (gateway API)
+    def signal(self):
+        return self._call("signal")
+
+    def can_admit(self, r_need: float, model: Optional[str] = None) -> bool:
+        return self._call("can_admit", r_need, model)
+
+    def t_act(self, model: str) -> float:
+        return self._call("t_act", model)
+
+    def degradation_cost(self, r_need: float) -> Optional[float]:
+        return self._call("degradation_cost", r_need)
+
+    def make_room(self, r_need: float) -> None:
+        self._call("make_room", r_need)
+
+    def submit(self, model: str, req: Request) -> None:
+        self._call("submit", model, req)
+        self._inflight += 1
+
+    def preempt(self, model: str, req_id: int) -> Optional[Request]:
+        req = self._call("preempt", model, req_id)
+        if req is not None:
+            self._inflight -= 1
+            self._progress.pop(req_id, None)
+        return req
+
+    def kv_stats(self) -> Dict[str, float]:
+        return self._call("kv_stats")
+
+    # ------------------------------------------------------------------ step
+    def step_send(self) -> None:
+        """Fire one engine iteration without waiting for the reply. Idle
+        workers (nothing submitted and not yet finished) are skipped — an
+        engine step with no waiting/active work is a no-op, so skipping the
+        round trip changes nothing but the IPC bill."""
+        if self._inflight == 0:
+            self._step_pending = False
+            return
+        self.wait_ready()
+        self._send("step", ())
+        self._step_pending = True
+
+    def step_recv(self) -> Dict[str, List[Request]]:
+        """Collect the reply of the last ``step_send`` (finished requests by
+        model), folding the worker's measured step wall-clock and per-request
+        decode progress into the handle."""
+        if self._step_buffer is not None:
+            out, self._step_buffer = self._step_buffer, None
+            return out
+        if not self._step_pending:
+            return {}
+        return self._recv_step()
+
+    def _send(self, method: str, args: tuple) -> None:
+        """One request onto the pipe, with a diagnosable error if the worker
+        died mid-run (OOM-kill/segfault) instead of a bare BrokenPipeError."""
+        try:
+            self._conn.send((method, args))
+        except (BrokenPipeError, OSError):
+            raise RuntimeError(
+                f"node {self.node_id} worker died before {method!r} "
+                f"(exitcode={self.proc.exitcode})")
+
+    def _recv(self, method: str):
+        """One reply off the pipe, with a diagnosable error if the worker
+        died mid-run (OOM-kill/segfault) instead of a bare EOFError."""
+        try:
+            return self._conn.recv()
+        except EOFError:
+            raise RuntimeError(
+                f"node {self.node_id} worker died during {method!r} "
+                f"(exitcode={self.proc.exitcode})")
+
+    def _recv_step(self) -> Dict[str, List[Request]]:
+        # measure from recv START (not from the broadcast): time a reply
+        # spends ready in the pipe while the gateway drains earlier nodes
+        # is neither this node's compute nor IPC overhead
+        t0 = time.perf_counter()
+        kind, payload, step_wall = self._recv("step")
+        elapsed = time.perf_counter() - t0
+        self.ipc_calls += 1
+        self._step_pending = False
+        if kind != "ok":
+            raise RuntimeError(
+                f"node {self.node_id} worker error in step:\n{payload}")
+        out, self._progress = payload
+        # the step round trip is dominated by real engine compute; only the
+        # residual (pipe + pickling + scheduling) is IPC overhead — charging
+        # the whole wait would double-count worker_step_wall_s and inflate
+        # the fleet-summed overhead by ~n_nodes under the overlapped tick.
+        # (If the reply was not ready yet, elapsed still contains remaining
+        # compute; subtracting the full step wall clamps that to 0 — the
+        # counter may under-read pipe cost but never inflates it.)
+        self.ipc_wall_s += max(0.0, elapsed - step_wall)
+        self.worker_step_wall_s += step_wall
+        for reqs in out.values():
+            self._inflight -= len(reqs)
+        return out
+
+    def step(self) -> Dict[str, List[Request]]:
+        self.step_send()
+        return self.step_recv()
+
+    def out_len(self, req_id: int) -> int:
+        """Decode progress of an in-flight request as of the last collected
+        step — the process-backend stand-in for reading ``req.out`` on the
+        engine's own Request object."""
+        return self._progress.get(req_id, 0)
+
+    def worker_stats(self) -> Dict[str, float]:
+        return {"ipc_calls": int(self.ipc_calls),
+                "ipc_wall_s": float(self.ipc_wall_s),
+                "worker_step_wall_s": float(self.worker_step_wall_s)}
+
+
+def spawn_fleet(specs: Sequence[WorkerSpec]) -> List[NodeHandle]:
+    """Spawn one worker per spec, booting in parallel: all processes start
+    before any ready handshake is awaited, so fleet boot costs the slowest
+    node, not the sum."""
+    ctx = mp.get_context("spawn")
+    handles = [NodeHandle(s, ctx=ctx) for s in specs]
+    try:
+        for h in handles:
+            h.wait_ready()
+    except Exception:
+        close_fleet(handles)
+        raise
+    return handles
+
+
+def close_fleet(fleet: Sequence[Any]) -> None:
+    """Shut down every worker handle in a (possibly mixed) fleet; in-process
+    ``NodeRuntime`` members are left untouched. Safe to call even when the
+    gateway was never constructed (the constructor-failure path) and safe to
+    call twice — handle close is idempotent."""
+    for node in fleet:
+        if hasattr(node, "close"):
+            node.close()

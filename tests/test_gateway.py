@@ -91,16 +91,25 @@ def test_oversized_prompt_truncated_at_dispatch(zoo_host):
 
 def test_admission_rejection_under_tight_hbm(zoo_host):
     """A stage whose rho-margined R_need can never fit is rejected (counted)
-    and its job eventually dropped — no OOM, no livelock."""
+    and its job eventually dropped — no OOM, no livelock — and the drop
+    clears every piece of readiness bookkeeping (no orphan stage ids in
+    ready_since / the queue / the reject counters)."""
     fleet = _fleet(zoo_host, [NodeSpec(0, hbm_budget=96e6, max_slots=2)])
     giant = StubPred(length=2_000_000.0)     # R_kv_hat >> any node's HBM
-    job = LiveJob(0, "t", True, 0.0, [_stage(0, 0, [], True)])
+    job = LiveJob(0, "t", True, 0.0, [
+        _stage(0, 0, [], True),
+        _stage(1, 0, [0], True),             # downstream, never becomes ready
+    ])
     gw = ClusterGateway(fleet, RTT, predictor=giant, policy="maestro",
                         cfg=GatewayConfig(reject_limit=5))
     m = gw.run([job], max_ticks=500)
     assert m.admission_rejections > 0
     assert m.dropped_jobs == 1 and m.finished_jobs == 0
     assert gw.tick < 500                     # terminated by the drop, not cap
+    for sid in (0, 1):                       # _drop_job left no orphans
+        assert sid not in gw.ready_t
+        assert gw.ready_since(sid) == float("inf")
+        assert sid not in gw._queued and sid not in gw._rejects
 
 
 def test_boundary_preemption_by_interactive_arrival(zoo_host):

@@ -1,0 +1,153 @@
+"""Multi-process node backend: worker protocol + inproc/process parity.
+
+The acceptance bar for the process backend is exact reproducibility: under
+the gateway's deterministic virtual clock, a fleet of worker processes must
+produce the SAME completion sets and the SAME metrics as the cooperative
+in-process fleet — concurrency changes wall-clock, never the outcome."""
+import numpy as np
+import pytest
+
+from _stubs import StubPred
+from repro.data.tracegen import generate_trace
+from repro.serving.cluster import (ClusterSpec, LiveJob, LiveStage, NodeSpec,
+                                   build_fleet, jobs_from_trace)
+from repro.serving.engine import PromptTooLongError, Request
+from repro.serving.gateway import ClusterGateway, GatewayConfig
+from repro.serving.worker import NodeHandle, WorkerSpec, close_fleet
+
+RTT = np.array([[0.001, 0.04], [0.04, 0.001]])
+ZOO_NAMES = ("qwen3-8b",)
+
+# GatewayMetrics fields that legitimately differ between backends: the
+# backend tag itself and the wall-clock/IPC accounting of the workers
+BACKEND_ONLY = {"node_backend", "ipc_calls", "ipc_wall_s",
+                "worker_step_wall_s", "worker_stats"}
+
+
+def _run(backend, make_jobs, specs, policy="fcfs", predictor=None):
+    spec = ClusterSpec(nodes=tuple(specs), rtt_s=RTT, model_names=ZOO_NAMES)
+    fleet = build_fleet(spec, backend=backend)
+    try:
+        gw = ClusterGateway(fleet, RTT, predictor=predictor, policy=policy,
+                            cfg=GatewayConfig(node_backend=backend))
+        m = gw.run(make_jobs())
+        events = {sid: (e.node_id, e.out_len, e.finish_t, e.dispatch_t,
+                        e.preemptions, e.queue_delay_s)
+                  for sid, e in gw.telemetry.events.items()}
+    finally:
+        close_fleet(fleet)       # covers gateway-constructor failures too
+    return m, events
+
+
+def _assert_parity(m_in, ev_in, m_proc, ev_proc):
+    assert set(ev_in) == set(ev_proc)              # same completion set
+    assert ev_in == ev_proc                        # same nodes/times/outputs
+    row_in, row_proc = m_in.row(), m_proc.row()
+    for k in row_in:
+        if k not in BACKEND_ONLY:
+            assert row_in[k] == row_proc[k], (k, row_in[k], row_proc[k])
+
+
+def test_trace_workload_parity():
+    """Generated multi-agent trace over two clusters: identical completion
+    sets and bit-identical metrics on inproc vs worker-process fleets, and
+    the workers really did the serving (per-node IPC counters > 0)."""
+    specs = [NodeSpec(0, max_slots=2), NodeSpec(1, max_slots=2)]
+
+    def jobs():
+        return jobs_from_trace(generate_trace(3, rate=2.0, seed=5),
+                               n_clusters=2, prompt_cap=8, gen_cap=8, seed=2)
+
+    m_in, ev_in = _run("inproc", jobs, specs)
+    m_proc, ev_proc = _run("process", jobs, specs)
+    assert m_in.finished_jobs == 3 and m_in.node_backend == "inproc"
+    assert m_proc.node_backend == "process"
+    _assert_parity(m_in, ev_in, m_proc, ev_proc)
+    assert m_proc.ipc_calls > 0 and m_proc.ipc_wall_s > 0
+    assert set(m_proc.worker_stats) == {0, 1}
+    for stats in m_proc.worker_stats.values():     # every node saw traffic
+        assert stats["ipc_calls"] > 0
+        assert stats["worker_step_wall_s"] > 0
+    assert m_in.ipc_calls == 0 and not m_in.worker_stats
+
+
+def test_preemption_parity():
+    """Boundary preemption (the path that reads decode progress, which lives
+    in the child on the process backend) makes identical decisions."""
+    specs = [NodeSpec(0, max_slots=1)]
+
+    def jobs():
+        def _obs():
+            from repro.core.predictor.features import StageObservation
+            return StageObservation(app=0, role=0, position=0.0,
+                                    invocation_idx=0, tools_available=0,
+                                    cot=False, prompt_len=32, model_id=0,
+                                    text="stage", src_cluster=0)
+        batch = LiveJob(0, "b", False, 0.0, [
+            LiveStage(stage_id=0, job_id=0, deps=[], obs=_obs(),
+                      interactive=False, tokens=[1, 2, 3, 4], max_new=40)])
+        inter = LiveJob(1, "i", True, 0.3, [
+            LiveStage(stage_id=1, job_id=1, deps=[], obs=_obs(),
+                      interactive=True, tokens=[5, 6, 7, 8], max_new=5)])
+        return [batch, inter]
+
+    m_in, ev_in = _run("inproc", jobs, specs, policy="maestro",
+                       predictor=StubPred())
+    m_proc, ev_proc = _run("process", jobs, specs, policy="maestro",
+                           predictor=StubPred())
+    assert m_in.preemptions >= 1                   # the path was exercised
+    _assert_parity(m_in, ev_in, m_proc, ev_proc)
+
+
+def test_worker_handle_protocol():
+    """Direct protocol exercise on one spawned worker: signal snapshots,
+    admission estimates, typed error propagation, kv stats, idempotent
+    shutdown."""
+    h = NodeHandle(WorkerSpec(node_id=7, cluster_id=1,
+                              model_names=ZOO_NAMES, max_slots=2, s_max=32))
+    try:
+        h.wait_ready()
+        assert set(h.profiles) == set(ZOO_NAMES)
+        sig = h.signal()
+        assert sig.node_id == 7 and sig.cluster_id == 1
+        assert sig.headroom > 0
+        assert h.can_admit(1024.0, ZOO_NAMES[0])
+        assert h.t_act(ZOO_NAMES[0]) > 0           # cold model
+        assert h.degradation_cost(0.0) == 0.0
+        with pytest.raises(PromptTooLongError):    # typed, not RuntimeError
+            h.submit(ZOO_NAMES[0], Request(req_id=1,
+                                           tokens=list(range(40)),
+                                           max_new=4))
+        h.submit(ZOO_NAMES[0], Request(req_id=2, tokens=[1, 2, 3],
+                                       max_new=3))
+        out = {}
+        for _ in range(20):
+            for model, reqs in h.step().items():
+                for r in reqs:
+                    out[r.req_id] = r
+            if out:
+                break
+        assert out[2].out and len(out[2].out) == 3
+        stats = h.kv_stats()
+        assert stats["n_engines"] == 1
+        assert stats["arena_peak_pages"] > 0
+        assert h.worker_stats()["ipc_calls"] == h.ipc_calls > 0
+    finally:
+        h.close()
+        h.close()                                  # second close is a no-op
+    assert not h.proc.is_alive()
+
+
+def test_process_backend_requires_worker_fleet(zoo_host=None):
+    """Config/fleet mismatch is a construction-time error, not a hang."""
+    fleet = build_fleet(ClusterSpec(nodes=(NodeSpec(0),), rtt_s=RTT,
+                                    model_names=ZOO_NAMES))
+    with pytest.raises(ValueError, match="process"):
+        ClusterGateway(fleet, RTT, policy="fcfs",
+                       cfg=GatewayConfig(node_backend="process"))
+    with pytest.raises(ValueError, match="node_backend"):
+        ClusterGateway(fleet, RTT, policy="fcfs",
+                       cfg=GatewayConfig(node_backend="threads"))
+    with pytest.raises(ValueError, match="backend"):
+        build_fleet(ClusterSpec(nodes=(NodeSpec(0),), rtt_s=RTT,
+                                model_names=ZOO_NAMES), backend="threads")
