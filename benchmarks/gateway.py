@@ -9,6 +9,13 @@ attainment — the prototype-experiment counterpart of Fig. 7 / Table II /
 Table VIII, with one row per registered policy. The returned payload is
 persisted by ``benchmarks.run`` as ``BENCH_gateway.json`` so the live-plane
 perf trajectory is machine-trackable across PRs.
+
+``wall_main`` (``--clock wall``) is the clock-plane counterpart: the same
+trace served under the WALL clock on both node backends, measuring real
+elapsed makespan and per-node overlap — the row that demonstrates worker
+processes genuinely overlap engine compute in measured time. Persisted as
+``BENCH_gateway_wall.json`` (machine-dependent; never clobbers the virtual
+baselines — see docs/BENCHMARKS.md).
 """
 from __future__ import annotations
 
@@ -16,7 +23,7 @@ import time
 from typing import Dict, List, Optional, Sequence
 
 from benchmarks.common import banner, get_predictor, get_trace
-from repro.core.sched.policies import registered_policies
+from repro.core.sched.policies import POLICIES, registered_policies
 from repro.serving.cluster import (ClusterSpec, NodeSpec, build_fleet,
                                    build_zoo, jobs_from_trace)
 from repro.serving.gateway import ClusterGateway, GatewayConfig
@@ -108,6 +115,170 @@ def main(n_jobs: int = 240, rate: float = 2.0, fast: bool = False,
               f"({'better' if gain > 0 else 'WORSE — investigate'})")
         payload["maestro_minus_fcfs_interactive_qd_s"] = -gain
     return payload
+
+
+def _busy_probe(q) -> None:
+    t0 = time.time()
+    n = 0
+    while time.time() - t0 < 0.4:
+        for _ in range(10_000):
+            n += 1
+    q.put(n)
+
+
+def host_parallel_scaling() -> float:
+    """How much CPU-bound throughput this host gains from a second
+    process: total iterations of two concurrent busy loops over one.
+    ~2.0 on a real 2+-core machine; ~1.3 on a hyperthread-sibling or
+    oversubscribed 2-vCPU container. The wall benchmark records this and
+    only ASSERTS the process-fleet speedup where the host can physically
+    express cross-process overlap — on a ~1.3x box the engine compute is
+    hardware-serialized no matter how well the fleet overlaps, and the
+    overlap_factor column is the meaningful evidence instead."""
+    import multiprocessing as mp
+    ctx = mp.get_context("spawn")
+
+    def run(n_procs: int) -> int:
+        q = ctx.Queue()
+        ps = [ctx.Process(target=_busy_probe, args=(q,))
+              for _ in range(n_procs)]
+        for p in ps:
+            p.start()
+        total = sum(q.get() for _ in ps)
+        for p in ps:
+            p.join()
+        return total
+
+    single = run(1)
+    return run(2) / max(single, 1)
+
+
+#: two-process scaling below which a host cannot express cross-process
+#: compute overlap (hyperthread siblings / CPU-quota containers)
+_SCALING_FLOOR = 1.5
+
+
+def _wall_spec() -> ClusterSpec:
+    # 3 nodes over 3 clusters, batch-8 engines: wide enough that one
+    # engine iteration carries real compute (per-step overhead amortizes
+    # over the batch), roomy enough HBM that deep in-flight pipelining
+    # never triggers Alg. 2 churn — the regime where cross-process overlap
+    # is measurable even on small CI-class hosts
+    return ClusterSpec(nodes=(NodeSpec(0, max_slots=8, hbm_budget=2e9),
+                              NodeSpec(1, max_slots=8, hbm_budget=2e9),
+                              NodeSpec(2, max_slots=8, hbm_budget=2e9)))
+
+
+def wall_main(n_jobs: int = 64, rate: float = 16.0, seed: int = 7,
+              policies: Optional[Sequence[str]] = None,
+              max_run_s: float = 900.0, gen_cap: int = 48,
+              repeats: int = 2, assert_speedup: bool = True) -> Dict:
+    """Wall-clock gateway sweep: the SAME trace served under real time on
+    the in-process fleet (engine steps serialized in the gateway process)
+    and the worker-process fleet (free-running children), on the ≥3-node
+    cross-cluster spec. The headline number is ``process_speedup_x`` —
+    in-process wall makespan over process wall makespan; > 1 means the
+    worker fleet's engine compute genuinely overlapped in measured time.
+
+    Both fleets are WARMED before the measured window (``gw.warmup()``), so
+    makespan compares steady-state serving, not per-process JIT compile.
+    Each (policy, backend) cell runs ``repeats`` times INTERLEAVED and the
+    per-backend makespan is the best-of (min) — small hosts have easily
+    ±15% run-to-run noise, and interleaving keeps slow phases of the box
+    from landing entirely on one backend.
+
+    ``assert_speedup=False`` (CI smoke) asserts only completion, never
+    latency — wall timings are machine-dependent and must not flake CI."""
+    banner(f"gateway-wall: real-time serving ({n_jobs} jobs, "
+           f"inproc vs process fleets, best of {repeats})")
+    scaling = host_parallel_scaling()
+    print(f"[gateway-wall] host 2-process scaling: {scaling:.2f}x "
+          f"({'full' if scaling >= _SCALING_FLOOR else 'constrained'} "
+          f"host; speedup asserted only on full hosts)")
+    names = tuple(policies) if policies else ("least-loaded",)
+    pred = (get_predictor(n_jobs=800, fast=True)
+            if any(POLICIES[n].needs_predictor for n in names) else None)
+    spec = _wall_spec()
+    trace = get_trace(n_jobs, seed=seed, rate=rate)
+    n_clusters = spec.rtt_s.shape[0]
+
+    rows: List[Dict] = []
+    speedups: Dict[str, float] = {}
+    for policy in names:
+        span: Dict[str, float] = {}
+        for rep in range(max(1, repeats)):
+            for backend in ("inproc", "process"):
+                fleet = build_fleet(spec, backend=backend)
+                jobs = jobs_from_trace(trace, n_clusters=n_clusters,
+                                       seed=seed, prompt_cap=8,
+                                       gen_cap=gen_cap)
+                t0 = time.time()
+                try:
+                    gw = ClusterGateway(
+                        fleet, spec.rtt_s, predictor=pred, policy=policy,
+                        cfg=GatewayConfig(clock="wall",
+                                          node_backend=backend,
+                                          max_inflight_per_node=12,
+                                          max_run_s=max_run_s))
+                    gw.warmup()
+                    m = gw.run(jobs)
+                finally:
+                    close_fleet(fleet)
+                wall = time.time() - t0
+                # completion, not latency: wall rows may never flake CI
+                assert m.finished_jobs > 0, \
+                    f"{policy}/{backend}: no jobs finished (wall clock)"
+                assert m.clock == "wall" and m.wall_makespan_s > 0
+                span[backend] = min(span.get(backend, float("inf")),
+                                    m.makespan_s)
+                row = m.row()
+                row["wall_s"] = round(wall, 1)
+                row["repeat"] = rep
+                rows.append(row)
+                print(f"[gateway-wall] {policy:>13}/{backend:<7} r{rep}: "
+                      f"makespan={m.makespan_s:.1f}s "
+                      f"overlap={m.overlap_factor:.2f} "
+                      f"int_qd={m.interactive_queue_delay_s:.2f}s "
+                      f"fin={m.finished_jobs}/{n_jobs} "
+                      f"outcome={m.run_outcome} ({wall:.0f}s wall)")
+        speedups[policy] = span["inproc"] / max(span["process"], 1e-9)
+        print(f"[gateway-wall] {policy}: process fleet speedup "
+              f"{speedups[policy]:.2f}x (best inproc {span['inproc']:.1f}s "
+              f"vs best process {span['process']:.1f}s)")
+        if assert_speedup and scaling >= _SCALING_FLOOR:
+            # the acceptance bar for the clock plane: on a >=3-node fleet
+            # the free-running worker fleet beats cooperative stepping in
+            # real time. Only asserted on sized runs (never CI smoke) and
+            # only where the host can express cross-process overlap at
+            # all — on a constrained (~1.3x-scaling) container the engine
+            # compute is hardware-serialized, makespans tie by physics,
+            # and the process rows' overlap_factor > 1 is the evidence
+            # that the fleet genuinely overlapped in measured time.
+            assert speedups[policy] > 1.0, \
+                f"{policy}: process wall makespan did not beat inproc " \
+                f"({span})"
+        elif assert_speedup:
+            print(f"[gateway-wall] {policy}: speedup assertion skipped "
+                  f"(host scaling {scaling:.2f}x < {_SCALING_FLOOR}x — "
+                  f"compute is hardware-serialized here; see "
+                  f"overlap_factor for the concurrency evidence)")
+    return {
+        "clock": "wall",
+        "n_jobs": n_jobs,
+        "n_stages": sum(len(j.stages) for j in trace),
+        "rate_jobs_per_s": rate,
+        "gen_cap": gen_cap,
+        "nodes": len(spec.nodes),
+        "clusters": spec.n_clusters,
+        "max_slots": spec.nodes[0].max_slots,
+        "max_run_s": max_run_s,
+        "warmup": True,
+        "repeats": repeats,
+        "host_parallel_scaling_x": round(scaling, 2),
+        "policies": list(names),
+        "process_speedup_x": speedups,
+        "rows": rows,
+    }
 
 
 if __name__ == "__main__":

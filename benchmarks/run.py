@@ -6,6 +6,9 @@
   python -m benchmarks.run --only table5_memory fig10_activation
   python -m benchmarks.run --smoke --only gateway --backend process
                                         # live gateway on worker processes
+  python -m benchmarks.run --smoke --only gateway --clock wall
+                                        # wall-clock gateway (real elapsed
+                                        # time, inproc vs process fleets)
 """
 from __future__ import annotations
 
@@ -20,15 +23,29 @@ BENCHES = {}
 SMOKE_POLICIES = ("fcfs", "maestro")
 
 
-def _register(mode: str, backend: str = "inproc") -> None:
+def _register(mode: str, backend: str = "inproc",
+              clock: str = "virtual") -> None:
     from benchmarks import (activation, colocation, fitness, gateway, kernels,
                             memory, prediction, preemption, scheduling)
     fast = mode != "full"
     smoke = mode == "smoke"
-    BENCHES.update({
-        "gateway": lambda: gateway.main(
+    if clock == "wall":
+        # wall rows are machine-dependent: smoke asserts completion only
+        # (max_run_s-capped so a hung fleet fails fast instead of wedging
+        # CI); sized runs additionally assert the process-fleet speedup
+        gateway_bench = lambda: gateway.wall_main(  # noqa: E731
+            n_jobs={"full": 96, "fast": 64, "smoke": 4}[mode],
+            rate={"full": 16.0, "fast": 16.0, "smoke": 2.0}[mode],
+            max_run_s={"full": 1800.0, "fast": 900.0, "smoke": 300.0}[mode],
+            gen_cap={"full": 48, "fast": 48, "smoke": 8}[mode],
+            repeats=1 if smoke else 2,
+            assert_speedup=not smoke)
+    else:
+        gateway_bench = lambda: gateway.main(  # noqa: E731
             n_jobs={"full": 240, "fast": 24, "smoke": 5}[mode], fast=fast,
-            policies=SMOKE_POLICIES if smoke else None, backend=backend),
+            policies=SMOKE_POLICIES if smoke else None, backend=backend)
+    BENCHES.update({
+        "gateway": gateway_bench,
         "table3_6_7_prediction": lambda: prediction.main(
             n_jobs=800 if fast else 2500),
         "fig7_scheduling": lambda: scheduling.main(
@@ -55,9 +72,15 @@ def main() -> None:
                     default="inproc",
                     help="gateway node backend: cooperative in-process "
                          "runtimes (default) or one worker process per node")
+    ap.add_argument("--clock", choices=("virtual", "wall"),
+                    default="virtual",
+                    help="gateway clock: deterministic virtual ticks "
+                         "(default) or real wall time (runs BOTH node "
+                         "backends and reports the process-fleet speedup; "
+                         "rows land in BENCH_gateway_wall.json)")
     args = ap.parse_args()
     mode = "smoke" if args.smoke else "fast" if args.fast else "full"
-    _register(mode, backend=args.backend)
+    _register(mode, backend=args.backend, clock=args.clock)
     names = args.only or list(BENCHES)
     failures = []
     t_all = time.time()
@@ -68,13 +91,16 @@ def main() -> None:
             if payload is not None:
                 # machine-readable perf record (e.g. BENCH_gateway.json) so
                 # the trajectory is trackable across PRs; non-default node
-                # backends get their own file (BENCH_gateway_process.json)
-                # so they never clobber the in-process baseline record
+                # backends and the wall clock get their own files
+                # (BENCH_gateway_process.json / BENCH_gateway_wall.json) so
+                # they never clobber the virtual in-process baseline record
                 from benchmarks.common import save_result
                 suffix = ""
-                if (isinstance(payload, dict)
-                        and payload.get("node_backend", "inproc") != "inproc"):
-                    suffix = f"_{payload['node_backend']}"
+                if isinstance(payload, dict):
+                    if payload.get("clock", "virtual") == "wall":
+                        suffix = "_wall"
+                    elif payload.get("node_backend", "inproc") != "inproc":
+                        suffix = f"_{payload['node_backend']}"
                 try:
                     save_result(f"BENCH_{name}{suffix}", payload)
                 except TypeError as e:   # non-JSON payload: keep bench green

@@ -1,20 +1,37 @@
 #!/usr/bin/env python
-"""CI docs check: every file under docs/ must be REACHABLE from the README.
+"""CI docs check, two layers:
 
-The README is the repo's front door; a doc nobody links is a doc nobody
-finds. Reachability is transitive: a file linked from a doc that is itself
-reachable counts (so docs/ can grow sub-pages and figures without forcing
-a README link for each). A link counts when the target's repo-relative
-path, or its path relative to the linking document's directory, appears in
-the document text. Fails (exit 1) listing any unreachable docs/ file.
+1. REACHABILITY — every file under docs/ must be reachable from README.md.
+   The README is the repo's front door; a doc nobody links is a doc nobody
+   finds. Reachability is transitive: a file linked from a doc that is
+   itself reachable counts (so docs/ can grow sub-pages and figures without
+   forcing a README link for each). A link counts when the target's
+   repo-relative path, or its path relative to the linking document's
+   directory, appears in the document text.
+
+2. LINK VALIDITY — every RELATIVE markdown link in README.md and docs/*.md
+   must resolve: the target file exists, and when the link carries a
+   ``#fragment`` pointing into a markdown file, a heading with that
+   GitHub-style anchor slug exists in the target (``#fragment`` alone
+   checks the linking document itself). External schemes (http/https/
+   mailto) are not validated.
+
+Fails (exit 1) listing any unreachable docs/ file or broken link/anchor.
 """
 from __future__ import annotations
 
 import os
 import pathlib
+import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# [text](target) — target up to the first closing paren/whitespace; images
+# and reference-style definitions are out of scope for this repo's docs
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
 
 
 def _text(path: pathlib.Path) -> str:
@@ -24,12 +41,50 @@ def _text(path: pathlib.Path) -> str:
         return ""            # binary assets link TO nothing
 
 
+def _anchor_slug(heading: str) -> str:
+    """GitHub-style anchor for a markdown heading: strip inline code/link
+    markup, lowercase, drop everything but word chars/spaces/hyphens, then
+    spaces -> hyphens."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading)          # inline code
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", h)    # inline links
+    h = h.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _anchors(md: pathlib.Path) -> set:
+    return {_anchor_slug(m.group(1))
+            for m in _HEADING_RE.finditer(_text(md))}
+
+
+def check_relative_links(md_files) -> list:
+    """Validate every relative link (and #anchor) in the given markdown
+    files; returns a list of human-readable error strings."""
+    errors = []
+    for doc in md_files:
+        rel_doc = doc.relative_to(ROOT)
+        for target in _LINK_RE.findall(_text(doc)):
+            if target.startswith(_EXTERNAL):
+                continue
+            path_part, _, fragment = target.partition("#")
+            tgt = doc if not path_part \
+                else (doc.parent / path_part).resolve()
+            if path_part and not tgt.exists():
+                errors.append(f"{rel_doc}: broken link -> {target}")
+                continue
+            if fragment and tgt.suffix == ".md":
+                if fragment not in _anchors(tgt):
+                    errors.append(f"{rel_doc}: missing anchor "
+                                  f"#{fragment} in {tgt.relative_to(ROOT)}")
+    return errors
+
+
 def main() -> int:
     docs = sorted(p for p in (ROOT / "docs").rglob("*") if p.is_file())
     if not docs:
         print("check_docs_links: no files under docs/ — nothing to check")
         return 0
-    # BFS from README.md: each newly reached doc's text can link further
+    # 1) BFS from README.md: each newly reached doc's text can link further
     sources = [(ROOT, _text(ROOT / "README.md"))]
     unreached = set(docs)
     progress = True
@@ -43,14 +98,26 @@ def main() -> int:
                 unreached.discard(p)
                 sources.append((p.parent, _text(p)))
                 progress = True
+    failed = False
     if unreached:
+        failed = True
         print("check_docs_links: files under docs/ not reachable from "
               "README.md:")
         for p in sorted(unreached):
             print(f"  - {p.relative_to(ROOT)}")
+    # 2) relative links + anchors in README and every markdown doc
+    md_files = [ROOT / "README.md"] + [p for p in docs
+                                       if p.suffix == ".md"]
+    errors = check_relative_links(md_files)
+    if errors:
+        failed = True
+        print("check_docs_links: broken relative links/anchors:")
+        for e in errors:
+            print(f"  - {e}")
+    if failed:
         return 1
-    print(f"check_docs_links: OK ({len(docs)} docs file(s) all reachable "
-          "from README.md)")
+    print(f"check_docs_links: OK ({len(docs)} docs file(s) reachable, "
+          f"{len(md_files)} markdown file(s) link/anchor-clean)")
     return 0
 
 

@@ -10,11 +10,14 @@ object schedules the trace-driven simulator (``repro.sim.simulator``) and
 the live real-engine gateway (``repro.serving.gateway``).
 
 Substrate time is opaque to policies: the simulator's clock runs in model
-seconds, the gateway's in virtual tick seconds. All durations a policy
-touches (``t_exec_est``, ``true_remaining_s``, ``preempt_gain_s``, the
-``job_remaining_s`` it records on finish) are expressed in the substrate's
-own clock, so relative ordering — the only thing scheduling decisions
-depend on — is preserved across planes.
+seconds, the gateway's in whatever its pluggable clock provides (virtual
+tick seconds by default, real elapsed seconds under the wall clock — see
+``repro.serving.clock``). All durations a policy touches (``t_exec_est``,
+``true_remaining_s``, ``preempt_gain_s``, the ``job_remaining_s`` it
+records on finish) are expressed in SECONDS on the substrate's own clock —
+never in ticks — so relative ordering (the only thing scheduling decisions
+depend on) is preserved across planes and across clocks, and hysteresis
+thresholds like ``preempt_gain_s`` are clock-independent.
 """
 from __future__ import annotations
 

@@ -66,14 +66,21 @@ def build_zoo(model_names: Sequence[str] = DEFAULT_ZOO, seed: int = 1
 def build_fleet(spec: Optional[ClusterSpec] = None,
                 zoo: Optional[Dict[str, Any]] = None,
                 host: Optional[Dict[str, Any]] = None,
-                seed: int = 1, backend: str = "inproc") -> List[Any]:
+                seed: int = 1, backend: str = "inproc",
+                worker_xla_flags: Optional[str] = None) -> List[Any]:
     """Instantiate the fleet; node ids are positional.
 
     ``backend="inproc"`` (default) returns in-process ``NodeRuntime``
     objects; ``backend="process"`` spawns one worker process per node and
     returns ``NodeHandle`` proxies (each child builds its own zoo from the
     same ``model_names`` + ``seed``, so the fleets are numerically
-    identical — ``zoo``/``host`` are ignored there)."""
+    identical — ``zoo``/``host`` are ignored there).
+    ``worker_xla_flags`` (process backend only) is appended to each child's
+    ``XLA_FLAGS`` before its XLA client forms — an operator knob for wall-
+    clock fleets (e.g. pin workers single-threaded on hosts where process
+    thread pools outnumber cores; measure first — on some hosts the pool
+    wins). Leave it None for virtual-clock runs, whose bit-identical
+    parity is stated for unmodified child numerics."""
     spec = spec or ClusterSpec()
     if backend == "process":
         from repro.serving.worker import WorkerSpec, spawn_fleet
@@ -81,7 +88,8 @@ def build_fleet(spec: Optional[ClusterSpec] = None,
             WorkerSpec(node_id=nid, cluster_id=ns.cluster_id,
                        model_names=tuple(spec.model_names),
                        hbm_budget=ns.hbm_budget, max_slots=ns.max_slots,
-                       s_max=ns.s_max, seed=seed)
+                       s_max=ns.s_max, seed=seed,
+                       xla_flags=worker_xla_flags)
             for nid, ns in enumerate(spec.nodes)])
     if backend != "inproc":
         raise ValueError(f"unknown node backend {backend!r} "

@@ -15,17 +15,31 @@ through the paper's full pipeline:
     -> post-execution calibration back through ``policy.on_finish``.
 
 The gateway is the live :class:`~repro.core.sched.substrate.Substrate`
-implementation: it owns the queue mechanics, the virtual clock and the
-telemetry, while every scheduling decision (queue order, reservation,
-routing, preemption) is delegated to the policy. Any registered policy name
-(fcfs / least-loaded / edf / oracle-srtf / maestro / maestro-np /
-baseline-lb / binpack / maestro-aff) runs on real engines.
+implementation: it owns the queue mechanics, the clock and the telemetry,
+while every scheduling decision (queue order, reservation, routing,
+preemption) is delegated to the policy. Any registered policy name (fcfs /
+least-loaded / edf / oracle-srtf / maestro / maestro-np / baseline-lb /
+binpack / maestro-aff) runs on real engines.
 
-The event loop is STEP-DRIVEN: one ``step()`` advances a virtual clock by
-``tick_s`` and runs one iteration of every busy engine. Network RTT and
-cold-start activation enter as deterministic virtual delays (a dispatched
-stage reaches its engine only after rtt + T_act of virtual time), so runs
-are reproducible and unit-testable — no wall-clock sleeps anywhere.
+The event loop is CLOCK-DRIVEN (:mod:`repro.serving.clock`): network RTT
+and cold-start activation enter as delayed event releases on the gateway's
+clock, periodic work (aging refresh, telemetry sampling) runs on
+clock-owned cadences, and the run deadline (``GatewayConfig.max_run_s``)
+is enforced by the clock with a typed ``RunDeadlineExceeded`` outcome.
+
+Two clocks plug in:
+
+- ``clock="virtual"`` (default): one loop pass advances ``tick_s`` virtual
+  seconds and runs one lock-step iteration of every busy engine. Fully
+  deterministic and bit-identical to the pre-clock-plane gateway on both
+  node backends — no wall-clock sleeps anywhere.
+- ``clock="wall"``: real monotonic time. Process-backend workers FREE-RUN
+  (continuous stepping in their own processes); the gateway submits and
+  polls asynchronously, so engine iterations genuinely overlap across
+  processes in measured time. Queue delay and SLO attainment come out in
+  real elapsed seconds; the policies' cost estimates (``t_exec_est``,
+  deadline profiling) remain the nominal virtual model, so scheduling
+  decisions share one code path on both clocks.
 """
 from __future__ import annotations
 
@@ -33,6 +47,7 @@ import collections
 import dataclasses
 import heapq
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -42,6 +57,8 @@ from repro.core.sched.fitness import NodeSignal
 from repro.core.sched.policies import SchedPolicy, make_policy
 from repro.core.sched.substrate import SchedStage
 from repro.core.topology import validate_rtt
+from repro.serving.clock import (RunDeadlineExceeded, VirtualClock,
+                                 make_clock)
 from repro.serving.cluster import LiveJob, LiveStage
 from repro.serving.engine import PromptTooLongError, Request
 from repro.serving.node_runtime import NodeRuntime
@@ -59,16 +76,58 @@ class GatewayConfig:
     static_reserve_tokens: int = 64    # non-predictive KV reservation (fcfs/ll)
     max_inflight_per_node: Optional[int] = None   # default: node max_slots
     reject_limit: int = 1000           # routing failures before job drop
-    preempt_gain_ticks: float = 2.0    # SRTF hysteresis, in ticks
+    headroom_sample_every: int = 10    # telemetry cadence, in ticks
+    # ---- clock plane ----------------------------------------------------
+    # "virtual": deterministic tick clock (default — tests and all cross-PR
+    # BENCH baselines). "wall": real monotonic seconds; workers free-run.
+    clock: str = "virtual"
+    # Run deadline in CLOCK seconds, enforced by the Clock; when exceeded
+    # the metrics carry a typed RunDeadlineExceeded outcome. None = the
+    # legacy workload-derived safety cap on the virtual clock, no deadline
+    # on the wall clock (wall runs should set this explicitly).
+    max_run_s: Optional[float] = None
+    # Clock-independent policy hysteresis / cadence, in SECONDS (the
+    # canonical fields — both clocks and both planes share this code path).
+    # None = derived from the deprecated tick-denominated shims below.
+    preempt_gain_s: Optional[float] = None     # default 2 ticks = 0.1 s
+    preempt_cooldown_s: Optional[float] = None  # default 10 ticks = 0.5 s
+    refresh_every_s: Optional[float] = None     # default 8 ticks = 0.4 s
+    wall_poll_s: float = 0.002         # wall clock: sleep while awaiting work
+    # ---- DEPRECATED tick-denominated shims ------------------------------
+    # superseded by the *_s fields above; still honored (converted via
+    # tick_s) so existing configs keep working, with a DeprecationWarning
+    # when explicitly overridden.
+    preempt_gain_ticks: float = 2.0
     preempt_cooldown_ticks: float = 10.0
-    refresh_every: int = 8             # aging refresh period (ticks)
-    headroom_sample_every: int = 10
+    refresh_every: int = 8
     # "inproc": nodes are NodeRuntime objects cooperatively stepped inside
     # the gateway process (deterministic default — tests and the virtual
     # clock depend on it). "process": nodes are worker.NodeHandle proxies,
-    # one OS process per node; one tick broadcasts step to every worker so
-    # engine iterations genuinely overlap across processes.
+    # one OS process per node; under the virtual clock one tick broadcasts
+    # step to every worker, under the wall clock workers free-run.
     node_backend: str = "inproc"
+
+    def resolved_seconds(self) -> Tuple[float, float, float]:
+        """(preempt_gain_s, preempt_cooldown_s, refresh_every_s) with the
+        deprecation shims applied: seconds-denominated fields win; tick
+        fields are converted through tick_s and warn when overridden."""
+        defaults = (("preempt_gain_ticks", 2.0, "preempt_gain_s"),
+                    ("preempt_cooldown_ticks", 10.0, "preempt_cooldown_s"),
+                    ("refresh_every", 8, "refresh_every_s"))
+        for old, dflt, new in defaults:
+            if getattr(self, old) != dflt and getattr(self, new) is None:
+                warnings.warn(
+                    f"GatewayConfig.{old} is deprecated (tick-denominated); "
+                    f"set {new} in seconds instead", DeprecationWarning,
+                    stacklevel=3)
+        gain = (self.preempt_gain_s if self.preempt_gain_s is not None
+                else self.preempt_gain_ticks * self.tick_s)
+        cool = (self.preempt_cooldown_s
+                if self.preempt_cooldown_s is not None
+                else self.preempt_cooldown_ticks * self.tick_s)
+        refresh = (self.refresh_every_s if self.refresh_every_s is not None
+                   else self.refresh_every * self.tick_s)
+        return float(gain), float(cool), float(refresh)
 
 
 @dataclasses.dataclass
@@ -78,12 +137,12 @@ class _InFlight:
     model: str
     req: Request
     r_need: float                     # reserved KV bytes (make_room target)
-    submit_at: float                  # virtual time the engine may see it
+    submit_at: float                  # clock time the engine may see it
     submitted: bool = False
 
 
 class ClusterGateway:
-    """The LIVE-plane Substrate: virtual tick clock, real engine execution."""
+    """The LIVE-plane Substrate: pluggable clock, real engine execution."""
 
     def __init__(self, fleet: Sequence[NodeRuntime], rtt_s: np.ndarray,
                  predictor=None, policy: Union[str, SchedPolicy] = "maestro",
@@ -93,6 +152,10 @@ class ClusterGateway:
         if self.cfg.node_backend not in ("inproc", "process"):
             raise ValueError(f"unknown node_backend "
                              f"{self.cfg.node_backend!r}")
+        # clock plane: the event machinery (delayed RTT/T_act releases,
+        # periodic cadences, run deadline) lives in the Clock — built
+        # first so an invalid mode fails before any fleet state is touched
+        self.clock = make_clock(self.cfg.clock, self.cfg.tick_s)
         # a fleet of worker handles implies the process backend even when
         # the config was left at its default; the reverse mismatch is a
         # hard error (an in-process runtime cannot be stepped remotely)
@@ -110,14 +173,26 @@ class ClusterGateway:
                          for name, p in next(iter(self.fleet.values()))
                          .profiles.items()}
         self.telemetry = telemetry or Telemetry()
-        self.preempt_gain_s = self.cfg.preempt_gain_ticks * self.cfg.tick_s
-        self.preempt_cooldown_s = (self.cfg.preempt_cooldown_ticks
-                                   * self.cfg.tick_s)
+        (self.preempt_gain_s, self.preempt_cooldown_s,
+         refresh_every_s) = self.cfg.resolved_seconds()
         self.policy = (make_policy(policy, predictor=predictor)
                        if isinstance(policy, str) else policy)
 
-        # clock + workload state
-        self.tick = 0
+        self._refresh_cad = self.clock.cadence(refresh_every_s)
+        self._headroom_cad = self.clock.cadence(
+            self.cfg.headroom_sample_every * self.cfg.tick_s)
+        self._deadline_hit: Optional[RunDeadlineExceeded] = None
+        # wall-clock accounting: real busy seconds per node (in-process
+        # backend; worker processes report their own step wall)
+        self._node_busy_s: Dict[int, float] = {nid: 0.0 for nid in self.fleet}
+        self._run_wall0: Optional[float] = None
+        if self.clock.name == "wall" and self.node_backend == "process":
+            # workers free-run: continuous stepping inside each child, the
+            # gateway polls for finished requests instead of lock-stepping
+            for node in self.fleet.values():
+                node.set_continuous(True)
+
+        # workload state
         self.stage_by_id: Dict[int, LiveStage] = {}
         self.jobs: Dict[int, LiveJob] = {}
         self.pending_deps: Dict[int, int] = {}
@@ -141,7 +216,7 @@ class ClusterGateway:
         self.pending_resv: Dict[int, float] = {nid: 0.0 for nid in self.fleet}
         # largest prompt ANY node's engine window accepts (>=1 decode slot);
         # per-node windows can be smaller — the engine's typed
-        # PromptTooLongError in _flush_submissions stays as the backstop
+        # PromptTooLongError in _submit_inflight stays as the backstop
         self._max_prompt = max(n.s_max for n in self.fleet.values()) - 1
         self._truncated = 0
         self._rejects: Dict[int, int] = collections.defaultdict(int)
@@ -158,7 +233,15 @@ class ClusterGateway:
     # ----------------------------------------------------------------- views
     @property
     def now(self) -> float:
-        return self.tick * self.cfg.tick_s
+        return self.clock.now()
+
+    @property
+    def tick(self) -> int:
+        """Tick counter of the virtual clock (legacy introspection); on the
+        wall clock, the nominal tick index real time corresponds to."""
+        if isinstance(self.clock, VirtualClock):
+            return self.clock.tick
+        return int(self.clock.now() / self.cfg.tick_s)
 
     @property
     def ctl(self):
@@ -190,10 +273,24 @@ class ClusterGateway:
     def node_ids(self) -> Sequence[int]:
         return sorted(self.fleet)
 
+    def _reported_signal(self, nid: int) -> Optional[NodeSignal]:
+        """Wall clock + free-running workers: the boundary-fresh NodeSignal
+        the child piggybacked on its last poll reply (§III's periodic
+        node->scheduler report). Routing/admission against this report
+        costs no round trip — a synchronous query would block until the
+        child's next engine-step boundary, stalling the dispatch loop.
+        None outside that mode (or before the first poll), meaning: ask
+        the node synchronously."""
+        if self.clock.name == "wall" and self.node_backend == "process":
+            return self.fleet[nid].last_signal()
+        return None
+
     def signal(self, nid: int) -> NodeSignal:
-        """Live NodeSignal with the gateway's virtual queue-delay EWMA (the
-        runtime's own queue statistic is engine-local and not in seconds)."""
-        sig = self.fleet[nid].signal()
+        """Live NodeSignal with the gateway's clock-based queue-delay EWMA
+        (the runtime's own queue statistic is engine-local, not seconds)."""
+        sig = self._reported_signal(nid)
+        sig = (dataclasses.replace(sig) if sig is not None
+               else self.fleet[nid].signal())
         sig.queue_delay_s = self.qd_ewma[nid]
         return sig
 
@@ -202,14 +299,45 @@ class ClusterGateway:
 
     def can_admit(self, nid: int, r_need: float,
                   model: Optional[str] = None) -> bool:
-        return (self.node_load[nid] < self.inflight_cap[nid]
-                and self.fleet[nid].can_admit(
-                    r_need + self.pending_resv[nid], model))
+        if self.node_load[nid] >= self.inflight_cap[nid]:
+            return False
+        sig = self._reported_signal(nid)
+        if sig is not None:
+            # signal-based admission: charge un-warm models their weight +
+            # context against the REPORTED headroom. Conservative relative
+            # to the node's own eviction-aware check (reclaimable-by-
+            # degradation memory is not counted); the engine's waiting
+            # queue + make_room at submit remain the ground-truth backstop.
+            extra = 0.0
+            if model is not None and model not in sig.warm_models:
+                prof = self.profiles[model]
+                extra = prof.weight_bytes + prof.ctx_bytes
+            return (sig.headroom - self.pending_resv[nid]
+                    >= r_need + extra)
+        return self.fleet[nid].can_admit(
+            r_need + self.pending_resv[nid], model)
 
     def t_act(self, nid: int, model: str) -> float:
+        sig = self._reported_signal(nid)
+        if sig is not None:
+            if model in sig.warm_models:
+                return sig.warm_models[model]
+            # cold model on a free-running worker: estimate the host->device
+            # transfer from the profile instead of a blocking round trip
+            # (a sync query would stall dispatch until the child's next
+            # engine-step boundary; routing only needs the ranking signal)
+            prof = self.profiles[model]
+            return prof.weight_bytes / prof.hw.host_link_bw
         return self.fleet[nid].t_act(model)
 
     def degradation_cost(self, nid: int, r_need: float) -> Optional[float]:
+        sig = self._reported_signal(nid)
+        if sig is not None and sig.headroom >= r_need:
+            # no shortfall against the reported headroom: C_deg is 0 by
+            # definition (NodeRuntime's own shortfall<=0 fast path) — skip
+            # the blocking round trip. A genuine shortfall still asks the
+            # node (it needs the engines' in-flight state for Alg. 2).
+            return 0.0
         return self.fleet[nid].degradation_cost(r_need)
 
     def known_stages(self) -> List[SchedStage]:
@@ -222,8 +350,10 @@ class ClusterGateway:
 
     def t_exec_est(self, stage: SchedStage,
                    l_hat: Optional[float]) -> float:
-        """Stage duration in VIRTUAL seconds (prefill tick + one decode tick
-        per predicted token, capped by the decode budget)."""
+        """Stage duration under the NOMINAL virtual execution model (prefill
+        tick + one decode tick per predicted token, capped by the decode
+        budget). Used by policies on BOTH clocks — wall-mode scheduling
+        ranks by the same estimates, so decisions share one code path."""
         ls = self.stage_by_id[stage.stage_id]
         l_hat = ls.max_new if l_hat is None else min(l_hat, ls.max_new)
         return self.cfg.tick_s * (1.0 + l_hat)
@@ -237,7 +367,7 @@ class ClusterGateway:
         return self.ready_t.get(stage_id, float("inf"))
 
     def job_remaining_v(self, stage: LiveStage) -> float:
-        """Remaining virtual execution time of the stage's job, AFTER this
+        """Remaining nominal execution time of the stage's job, AFTER this
         stage — the Eq. 8 sample recorded into the WorkflowProfileStore."""
         job = self.jobs[stage.job_id]
         return sum(self.cfg.tick_s * (1.0 + s.max_new) for s in job.stages
@@ -292,8 +422,10 @@ class ClusterGateway:
         self.arrivals.sort()
 
     def _deadline(self, job: LiveJob) -> float:
-        """SLO profiling against the virtual execution model: critical-path
-        time with everything warm, scaled by slo_factor."""
+        """SLO profiling against the nominal virtual execution model:
+        critical-path time with everything warm, scaled by slo_factor.
+        (Wall-clock runs keep these nominal deadlines — batch SLO rows are
+        machine-dependent there; see docs/BENCHMARKS.md.)"""
         finish: Dict[int, float] = {}
         for s in job.stages:
             start = max((finish[d] for d in s.deps), default=0.0)
@@ -301,15 +433,49 @@ class ClusterGateway:
         return self.cfg.slo_factor * max(finish.values())
 
     # ------------------------------------------------------------ event loop
+    def _auto_deadline_s(self, jobs: Sequence[LiveJob]) -> float:
+        """Workload-derived safety cap (the legacy ``max_ticks`` heuristic,
+        now expressed in seconds and enforced by the Clock with a typed
+        outcome instead of silent truncation)."""
+        n_stage_ticks = sum(s.max_new + 6 for j in jobs for s in j.stages)
+        return (40 * n_stage_ticks + 4000) * self.cfg.tick_s
+
     def run(self, jobs: Sequence[LiveJob],
-            max_ticks: Optional[int] = None) -> GatewayMetrics:
+            max_ticks: Optional[int] = None,
+            max_run_s: Optional[float] = None) -> GatewayMetrics:
+        """Serve ``jobs`` to completion or until the run deadline.
+
+        The deadline comes from (first match wins) the deprecated
+        ``max_ticks`` argument (virtual ticks), the ``max_run_s`` argument,
+        ``GatewayConfig.max_run_s``, or — virtual clock only — the
+        workload-derived safety cap. A deadline that fires is reported as a
+        typed ``RunDeadlineExceeded`` in the returned metrics."""
         self.submit_jobs(jobs)
-        if max_ticks is None:
-            n_stage_ticks = sum(s.max_new + 6 for j in jobs
-                                for s in j.stages)
-            max_ticks = 40 * n_stage_ticks + 4000
-        while self._unfinished() and self.tick < max_ticks:
+        self._run_wall0 = time.perf_counter()
+        # serving time starts NOW: pre-run work (e.g. warmup) is not billed
+        # to the measured window (no-op on the virtual clock)
+        self.clock.restart()
+        if max_run_s is None:
+            max_run_s = self.cfg.max_run_s
+        if max_ticks is not None:
+            if isinstance(self.clock, VirtualClock):
+                self.clock.set_deadline_ticks(max_ticks)  # exact legacy cap
+            else:
+                self.clock.set_deadline(max_ticks * self.cfg.tick_s)
+        elif max_run_s is not None:
+            self.clock.set_deadline(max_run_s)
+        elif isinstance(self.clock, VirtualClock):
+            self.clock.set_deadline(self._auto_deadline_s(jobs))
+        # wall clock with no explicit cap: unbounded (machine speed unknown)
+        while self._unfinished() and not self.clock.expired():
             self.step()
+        if self._unfinished() and self.clock.expired():
+            self._deadline_hit = RunDeadlineExceeded(
+                max_run_s=float(self.clock.deadline_s),
+                elapsed_s=self.clock.now(),
+                unfinished_jobs=sum(1 for j in self.jobs
+                                    if j not in self.job_finish
+                                    and j not in self.dropped))
         return self.metrics()
 
     def _unfinished(self) -> bool:
@@ -331,6 +497,10 @@ class ClusterGateway:
             (s["arena_utilization"] for s in stats), default=0.0)
         m.truncated_stages = self._truncated
         m.node_backend = self.node_backend
+        m.clock = self.clock.name
+        if self._deadline_hit is not None:
+            m.run_outcome = "deadline_exceeded"
+            m.run_deadline = self._deadline_hit
         if self.node_backend == "process":
             for nid, node in self.fleet.items():
                 self.telemetry.record_worker(nid, node.worker_stats())
@@ -341,46 +511,160 @@ class ClusterGateway:
                                for w in m.worker_stats.values())
             m.worker_step_wall_s = sum(w["worker_step_wall_s"]
                                        for w in m.worker_stats.values())
+        if self.clock.name == "wall":
+            # wall-only telemetry (left zero/empty on the virtual clock so
+            # virtual metrics stay bit-identical across backends):
+            # makespan in real seconds, per-node busy fractions and the
+            # fleet overlap factor (sum of busy seconds / makespan; > 1
+            # means engine compute genuinely overlapped across nodes)
+            m.wall_makespan_s = m.makespan_s
+            busy = (dict(self._node_busy_s)
+                    if self.node_backend == "inproc" else
+                    {nid: node.worker_stats()["worker_step_wall_s"]
+                     for nid, node in self.fleet.items()})
+            span = max(m.makespan_s, 1e-9)
+            m.node_busy_frac = {nid: b / span for nid, b in busy.items()}
+            m.overlap_factor = sum(busy.values()) / span
         return m
 
     def close(self) -> None:
         """Shut worker processes down (no-op for the in-process backend)."""
         close_fleet(self.fleet.values())
 
+    def warmup(self) -> None:
+        """Pre-activate every model on every node by running one tiny
+        request through each engine (prefill + decode), so weight transfer,
+        JIT compilation and first-touch allocation happen BEFORE the
+        measured serving window — the standard deployment warmup. On the
+        worker-process fleet children warm up in parallel. Not called by
+        default: virtual-clock baselines and tests measure cold fleets;
+        the wall-clock benchmark calls it so makespan compares steady-state
+        serving rather than per-process compile time."""
+        for nid, node in self.fleet.items():
+            for k, model in enumerate(sorted(self.profiles)):
+                node.submit(model, Request(req_id=-(nid * 64 + k + 1),
+                                           tokens=[1, 2, 3], max_new=2))
+        free_running = (self.clock.name == "wall"
+                        and self.node_backend == "process")
+        for _ in range(512):                    # bounded drain
+            if not any(n.has_work() for n in self.fleet.values()):
+                break
+            if free_running:
+                # children already free-run: just drain their buffers
+                for n in self.fleet.values():
+                    n.poll_finished()
+                time.sleep(0.005)
+            elif self.node_backend == "process":
+                for n in self.fleet.values():
+                    n.step_send()
+                for n in self.fleet.values():
+                    n.step_recv()
+            else:
+                for n in self.fleet.values():
+                    n.step()                    # warmup output discarded
+
     def step(self) -> None:
-        now = self.now
+        now = self.clock.now()
         # 1) arrivals: source stages of newly arrived jobs become ready
         while self.arrivals and self.arrivals[0][0] <= now:
             _, jid = self.arrivals.pop(0)
             for s in self.jobs[jid].stages:
                 if not s.deps:
                     self._mark_ready(s, now)
-        # 2) aging refresh of the global queue
-        if self.tick % self.cfg.refresh_every == 0:
+        # 2) aging refresh of the global queue (clock-owned cadence)
+        if self._refresh_cad.due():
             self._q_refresh(now)
         # 3) global-queue dispatch (routing + admission + preemption)
         self._dispatch(now)
-        # 4) stages whose rtt + activation virtual delay elapsed hit engines
-        self._flush_submissions(now)
-        # 5) one real iteration of every busy engine. Process backend:
-        # broadcast the step to all workers first so node iterations run
-        # concurrently, then collect replies in node order — same
-        # per-node event order as the cooperative in-process loop, so the
-        # virtual-clock outcome is identical (tests/test_worker.py parity)
-        if self.node_backend == "process":
-            for node in self.fleet.values():
-                node.step_send()
-        for nid, node in self.fleet.items():
-            out = (node.step_recv() if self.node_backend == "process"
-                   else node.step())
-            for model, reqs in out.items():
-                for req in reqs:
-                    self._on_finish(req, now)
-        # 6) telemetry sampling
-        if self.tick % self.cfg.headroom_sample_every == 0:
+        # 4) transit releases: stages whose rtt + activation delay elapsed
+        # (scheduled as clock events at dispatch) hit their engines
+        self._fire_releases(now)
+        # 5) engine progress: lock-step under the virtual clock, polling of
+        # free-running workers / direct stepping under the wall clock
+        did_work = self._collect_finished(now)
+        # 6) telemetry sampling (reported signals when workers free-run —
+        # an accountant round trip would block on an engine-step boundary)
+        if self._headroom_cad.due():
             for nid, node in self.fleet.items():
-                self.telemetry.sample_headroom(nid, node.acc.headroom)
-        self.tick += 1
+                sig = self._reported_signal(nid)
+                self.telemetry.sample_headroom(
+                    nid, sig.headroom if sig is not None
+                    else node.acc.headroom)
+        # 7) advance time: one tick (virtual) or sleep until the next
+        # wake-up (wall; skipped when engines did real work this pass)
+        self.clock.advance(None if did_work else self._next_wake(now))
+
+    def _collect_finished(self, now: float) -> bool:
+        """Drive engine progress and drain finished requests; returns True
+        when real engine work happened this pass (wall-clock pacing)."""
+        if self.clock.name != "wall":
+            # virtual: one lock-step iteration of every busy engine. Process
+            # backend: broadcast the step to all workers first so node
+            # iterations run concurrently, then collect replies in node
+            # order — same per-node event order as the cooperative
+            # in-process loop, so the virtual-clock outcome is identical
+            # (tests/test_worker.py parity)
+            if self.node_backend == "process":
+                for node in self.fleet.values():
+                    node.step_send()
+            for nid, node in self.fleet.items():
+                out = (node.step_recv() if self.node_backend == "process"
+                       else node.step())
+                self._drain(out, now)
+            return True
+        if self.node_backend == "process":
+            # workers free-run with one poll outstanding per busy node; the
+            # gateway folds in whatever replies are already in the pipe
+            # (a child answers at its next engine-step boundary), then
+            # re-arms — the dispatch loop NEVER blocks on worker compute,
+            # so finished stages turn into new dispatches within ~wall_poll_s
+            for nid, node in self.fleet.items():
+                out = node.drain_ready()
+                if out:
+                    self._drain(out, self.clock.now())
+                for rid in node.take_submit_errors():
+                    # async submit rejected (typed prompt-too-long): the
+                    # stage finishes truncated, same as the sync path
+                    rec = self.inflight.get(rid)
+                    if rec is not None:
+                        rec.req.truncated = True
+                        self._truncated += 1
+                        self._on_finish(rec.req, self.clock.now())
+                node.poll_send()
+            return False      # polling is not compute: let advance() pace
+        # wall + in-process: the gateway itself steps busy engines, one
+        # node after another — real elapsed time, but serialized in this
+        # process (the measured contrast to the free-running worker fleet)
+        stepped = False
+        for nid, node in self.fleet.items():
+            if node.has_work():
+                t0 = time.perf_counter()
+                out = node.step()
+                self._node_busy_s[nid] += time.perf_counter() - t0
+                stepped = True
+                self._drain(out, self.clock.now())
+        return stepped
+
+    def _drain(self, out: Dict[str, List[Request]], now: float) -> None:
+        for model, reqs in out.items():
+            for req in reqs:
+                self._on_finish(req, now)
+
+    def _next_wake(self, now: float) -> float:
+        """Earliest clock time anything can change (wall-clock sleep hint):
+        the next arrival, the next transit release, or a short poll
+        interval while work is queued or in flight."""
+        cands = []
+        if self.arrivals:
+            cands.append(self.arrivals[0][0])
+        nxt = self.clock.peek_next()
+        if nxt is not None:
+            cands.append(nxt)
+        if self.inflight or self._queued:
+            cands.append(now + self.cfg.wall_poll_s)
+        if not cands:
+            return now + self.cfg.wall_poll_s
+        return min(cands)
 
     # -------------------------------------------------------------- phases
     def _mark_ready(self, stage: LiveStage, now: float) -> None:
@@ -438,11 +722,13 @@ class ClusterGateway:
 
     def _dispatch_to(self, stage: LiveStage, nid: int, r_need: float,
                      now: float) -> None:
-        node = self.fleet[nid]
         view = self.view(stage)
         model = view.model
         rtt = self.rtt(stage, nid)
-        t_act = node.t_act(model)
+        # through the Substrate method, NOT the node: under the wall clock
+        # with free-running workers it answers from the reported signal (a
+        # direct node query would block until an engine-step boundary)
+        t_act = self.t_act(nid, model)
         if t_act > COLD_START_THRESHOLD_S:
             self.telemetry.cold_starts += 1
         l_hat = self.policy.predicted_len(self, view)
@@ -450,9 +736,12 @@ class ClusterGateway:
                       max_new=stage.max_new,
                       pred_len=(None if l_hat is None
                                 else float(min(l_hat, stage.max_new))))
-        self.inflight[stage.stage_id] = _InFlight(
+        rec = _InFlight(
             stage=stage, node_id=nid, model=model, req=req, r_need=r_need,
             submit_at=now + rtt + t_act)
+        self.inflight[stage.stage_id] = rec
+        # RTT + activation transit as a timed event release on the clock
+        self.clock.call_at(rec.submit_at, rec)
         self.node_load[nid] += 1
         self.pending_resv[nid] += r_need
         wait = max(0.0, now - self.ready_t.get(stage.stage_id, now))
@@ -462,31 +751,51 @@ class ClusterGateway:
         ev.node_id, ev.dispatch_t = nid, now
         ev.rtt_s, ev.t_act_s = rtt, t_act
 
-    def _flush_submissions(self, now: float) -> None:
-        for rec in list(self.inflight.values()):
-            if rec.submitted or rec.submit_at > now + 1e-9:
+    def _fire_releases(self, now: float) -> None:
+        """Submit every stage whose transit event released. Stale events
+        (the stage was preempted or re-dispatched while in transit, so a
+        different record — or none — is in flight) are dropped."""
+        for rec in self.clock.pop_due():
+            if self.inflight.get(rec.stage.stage_id) is not rec \
+                    or rec.submitted:
                 continue
-            node = self.fleet[rec.node_id]
-            if not node.acc.can_admit(rec.r_need):
-                # Alg. 2 cheap prefix (levels 1-2) executed live: sleep idle
-                # engines / drop warm contexts so the reservation fits
-                node.make_room(rec.r_need)
-            t0 = time.perf_counter()
-            rec.submitted = True
-            self.pending_resv[rec.node_id] -= rec.r_need
-            try:
-                node.submit(rec.model, rec.req)   # real activation on demand
-            except PromptTooLongError:
-                # typed rejection instead of silent KV overflow: the stage
-                # finishes truncated (empty output) and its job continues
-                rec.req.truncated = True
-                self._truncated += 1
-                self._on_finish(rec.req, now)
-                continue
+            self._submit_inflight(rec, now)
+
+    def _submit_inflight(self, rec: _InFlight, now: float) -> None:
+        node = self.fleet[rec.node_id]
+        sig = self._reported_signal(rec.node_id)
+        if sig is not None and sig.headroom >= rec.r_need:
+            pass        # reported headroom covers it: no accountant query
+        elif not node.acc.can_admit(rec.r_need):
+            # Alg. 2 cheap prefix (levels 1-2) executed live: sleep idle
+            # engines / drop warm contexts so the reservation fits
+            node.make_room(rec.r_need)
+        t0 = time.perf_counter()
+        rec.submitted = True
+        self.pending_resv[rec.node_id] -= rec.r_need
+        if self.clock.name == "wall" and self.node_backend == "process":
+            # free-running fleet: fire-and-forget — the ack (or typed
+            # prompt-too-long, surfaced via take_submit_errors on the next
+            # drain) would otherwise block the dispatch loop until the
+            # child's engine-step boundary
+            node.submit_send(rec.model, rec.req)
             ev = self.telemetry.event(rec.stage.stage_id, rec.stage.job_id,
                                       rec.stage.interactive)
-            ev.start_t = now
-            ev.wall_act_s = time.perf_counter() - t0
+            ev.start_t = now          # wall_act_s unknown on the async path
+            return
+        try:
+            node.submit(rec.model, rec.req)   # real activation on demand
+        except PromptTooLongError:
+            # typed rejection instead of silent KV overflow: the stage
+            # finishes truncated (empty output) and its job continues
+            rec.req.truncated = True
+            self._truncated += 1
+            self._on_finish(rec.req, now)
+            return
+        ev = self.telemetry.event(rec.stage.stage_id, rec.stage.job_id,
+                                  rec.stage.interactive)
+        ev.start_t = now
+        ev.wall_act_s = time.perf_counter() - t0
 
     def _on_finish(self, req: Request, now: float) -> None:
         rec = self.inflight.pop(req.req_id, None)

@@ -210,6 +210,12 @@ class NodeRuntime:
                 self.residency.demote_context(m)      # level 2
                 self.acc.unregister_context(m)
 
+    def has_work(self) -> bool:
+        """True while any colocated engine has waiting or active requests —
+        the free-running worker loop and the wall-clock gateway step/poll
+        only nodes for which this holds."""
+        return any(e.waiting or e.active for e in self.engines.values())
+
     def step(self) -> Dict[str, list]:
         out = {}
         for name, eng in self.engines.items():

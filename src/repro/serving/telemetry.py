@@ -1,9 +1,12 @@
 """Gateway telemetry: per-stage timing records, KV-headroom samples and
 SLO/latency aggregation for the LIVE serving plane.
 
-Times are in the gateway's virtual clock (deterministic step-driven seconds),
-except ``wall_act_s`` which records the real measured activation cost of the
-underlying ``NodeRuntime`` (host->device transfer + engine construction).
+Times are in the gateway's CLOCK (``GatewayMetrics.clock`` records which):
+deterministic step-driven virtual seconds under the default virtual clock,
+real elapsed seconds under the wall clock — so wall-clock rows report queue
+delay and SLO attainment against real time. ``wall_act_s`` always records
+the real measured activation cost of the underlying ``NodeRuntime``
+(host->device transfer + engine construction) regardless of clock.
 The summary mirrors ``repro.sim.simulator.SimResult`` so the live plane and
 the trace-driven simulator report the same policy-comparison columns.
 """
@@ -13,6 +16,8 @@ import dataclasses
 from typing import Dict, List, Optional
 
 import numpy as np
+
+from repro.serving.clock import RunDeadlineExceeded
 
 
 @dataclasses.dataclass
@@ -82,6 +87,24 @@ class GatewayMetrics:
     worker_step_wall_s: float = 0.0
     worker_stats: Dict[int, Dict[str, float]] = dataclasses.field(
         default_factory=dict)
+    # clock plane (PR 5): which clock produced this row ("virtual" = the
+    # deterministic tick clock, "wall" = real monotonic seconds) and the
+    # typed run outcome — "deadline_exceeded" + a RunDeadlineExceeded
+    # record when the clock's max_run_s fired before every job finished,
+    # instead of the old silent max_ticks truncation
+    clock: str = "virtual"
+    run_outcome: str = "completed"
+    run_deadline: Optional[RunDeadlineExceeded] = None
+    # wall-clock-only telemetry (zero/empty on the virtual clock so virtual
+    # rows stay bit-identical across node backends): makespan in real
+    # seconds, per-node engine-busy fraction of the run, and the fleet
+    # overlap factor (sum of per-node busy seconds / makespan — above 1.0
+    # only when engine compute genuinely overlapped across nodes, which the
+    # in-process backend can never achieve)
+    wall_makespan_s: float = 0.0
+    node_busy_frac: Dict[int, float] = dataclasses.field(
+        default_factory=dict)
+    overlap_factor: float = 0.0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)

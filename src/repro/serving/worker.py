@@ -25,6 +25,12 @@ Design points:
 - The handle counts every round trip (``ipc_calls``, ``ipc_wall_s``) and
   accumulates the worker-reported step wall-clock (``worker_step_wall_s``)
   — the per-node IPC-overhead counters surfaced through gateway telemetry.
+- Wall-clock free-run (``set_continuous``): under the gateway's wall clock
+  a child steps its own engines whenever they hold work, buffering finished
+  requests for the next ``poll_finished`` round trip — engine iterations
+  genuinely overlap across processes in *measured* time, with pipe requests
+  still serviced at every engine-step boundary (so preemption/admission
+  stay boundary-consistent). Virtual runs never enable this mode.
 - Determinism: the protocol is synchronous request/reply per node, and the
   gateway collects step replies in node order, so a "process" run under the
   deterministic virtual clock reproduces the in-process completion sets and
@@ -39,6 +45,7 @@ Design points:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import multiprocessing as mp
 import time
@@ -48,6 +55,9 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from repro.serving.engine import PromptTooLongError, Request
 
 _SHUTDOWN_TIMEOUT_S = 5.0
+# free-running children with idle engines block on the pipe this long per
+# loop pass instead of spinning (wall-clock continuous mode only)
+_IDLE_POLL_S = 0.005
 
 
 @dataclasses.dataclass
@@ -69,6 +79,15 @@ class WorkerSpec:
     ctx_bytes: Optional[int] = None
     page_tokens: Optional[int] = None
     seed: int = 1
+    # extra XLA_FLAGS applied inside the child BEFORE its XLA client forms
+    # (e.g. "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1"
+    # to run a worker single-threaded) — an operator knob for wall-clock
+    # fleets on thread-oversubscribed hosts; measure before enabling, the
+    # per-child pool sometimes wins anyway. None = inherit the parent
+    # environment unchanged, which is what the bit-identical virtual
+    # parity guarantee is stated for (thread partitioning can perturb
+    # last-ulp numerics).
+    xla_flags: Optional[str] = None
 
 
 def _worker_main(conn, spec: WorkerSpec) -> None:
@@ -82,6 +101,12 @@ def _worker_main(conn, spec: WorkerSpec) -> None:
     its IPC-overhead counter. Boot replies are ``("ready"|"boot_error",
     payload)``."""
     try:
+        if spec.xla_flags:
+            # must land before the child's first computation (the XLA
+            # client parses XLA_FLAGS when it is created, not at import)
+            import os
+            os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                                       + " " + spec.xla_flags).strip()
         from repro.serving.cluster import build_zoo
         from repro.serving.node_runtime import NodeRuntime
         zoo, host = build_zoo(spec.model_names, seed=spec.seed)
@@ -98,7 +123,39 @@ def _worker_main(conn, spec: WorkerSpec) -> None:
     except Exception:
         conn.send(("boot_error", traceback.format_exc()))
         return
+    # wall-clock free-running mode (set via the "continuous" method): the
+    # child steps its engines whenever they hold work, buffering finished
+    # requests for the gateway's next "poll", and services pipe requests
+    # with priority at every engine-step boundary. The default (continuous
+    # off) is the original strict request/reply loop, untouched — virtual
+    # runs stay bit-identical.
+    continuous = False
+    buffered: Dict[str, List[Request]] = {}
+    buffered_wall = 0.0
     while True:
+        if continuous:
+            has_work = node.has_work()
+            try:
+                ready = conn.poll(0.0 if has_work else _IDLE_POLL_S)
+            except (EOFError, OSError):
+                break
+            if not ready:
+                if has_work:
+                    t0 = time.perf_counter()
+                    out = node.step()
+                    for eng in node.engines.values():
+                        if eng.waiting and eng.free_slots:
+                            # admission blocked on memory, not slots: the
+                            # gateway admitted against a boundary-stale
+                            # headroom report, so reclaim locally (Alg. 2
+                            # cheap prefix; no-op when headroom suffices)
+                            # instead of waiting for a release that may
+                            # never come
+                            node.make_room(eng._r_need(eng.waiting[0]))
+                    buffered_wall += time.perf_counter() - t0
+                    for m, reqs in out.items():
+                        buffered.setdefault(m, []).extend(reqs)
+                continue
         try:
             method, args = conn.recv()
         except (EOFError, KeyboardInterrupt):
@@ -114,6 +171,23 @@ def _worker_main(conn, spec: WorkerSpec) -> None:
                             for eng in node.engines.values()
                             for rid, r in eng.active.items()}
                 payload = (out, progress)
+            elif method == "continuous":
+                continuous = bool(args[0])
+                payload = None
+            elif method == "poll":
+                # drain the free-run buffer: finished requests by model,
+                # current decode progress, the engine-step wall clock
+                # accumulated since the last poll, and a fresh NodeSignal —
+                # the periodic node->scheduler report of §III that lets the
+                # wall-clock gateway route/admit WITHOUT a synchronous
+                # round trip per decision (each one blocks until the next
+                # engine-step boundary)
+                progress = {rid: len(r.out)
+                            for eng in node.engines.values()
+                            for rid, r in eng.active.items()}
+                payload = (buffered, progress, buffered_wall,
+                           node.signal())
+                buffered, buffered_wall = {}, 0.0
             elif method == "headroom":
                 payload = node.acc.headroom
             elif method == "acc_can_admit":
@@ -181,6 +255,16 @@ class NodeHandle:
         self._progress: Dict[int, int] = {}
         self._step_pending = False
         self._step_buffer: Optional[Dict[str, List[Request]]] = None
+        # wall-clock free-run bookkeeping: the pipe is FIFO, so every
+        # outstanding request's reply arrives in send order — `_expected`
+        # records what each upcoming reply is (("poll",) / ("submit", rid)
+        # / ("sync", method)) and replies are folded into handle state as
+        # they are consumed
+        self._expected: collections.deque = collections.deque()
+        self._finished_buf: Dict[str, List[Request]] = {}
+        self._submit_errors: List[int] = []
+        self._poll_pending = False
+        self._cached_signal = None    # last NodeSignal piggybacked on a poll
 
     # ------------------------------------------------------------- lifecycle
     def wait_ready(self) -> "NodeHandle":
@@ -237,19 +321,61 @@ class NodeHandle:
             self._step_buffer = self._recv_step()
         t0 = time.perf_counter()
         self._send(method, args)
-        kind, payload, compute_wall = self._recv(method)
+        self._expected.append(("sync", method))
+        # asynchronous replies queued ahead of ours (armed polls, async
+        # submits — the pipe is FIFO and the child drains every pending
+        # request at one engine-step boundary) are folded into handle state
+        # on the way to our reply: one boundary wait covers them all
+        while True:
+            tag = self._expected.popleft()
+            if tag[0] != "sync":
+                self._fold_async(tag)
+                continue
+            kind, payload, compute_wall = self._recv(method)
+            self.ipc_calls += 1
+            # only the residual over the child-measured method execution is
+            # IPC overhead — a submit that pays a real activation
+            # (device_put of weights) must not read as pipe/pickle cost
+            self.ipc_wall_s += max(0.0,
+                                   time.perf_counter() - t0 - compute_wall)
+            if kind == "prompt_too_long":
+                raise PromptTooLongError(payload)
+            if kind != "ok":
+                raise RuntimeError(
+                    f"node {self.node_id} worker error in "
+                    f"{method}:\n{payload}")
+            return payload
+
+    def _fold_async(self, tag) -> None:
+        """Receive ONE asynchronous reply and fold it into handle state.
+        The pipe is FIFO, so ``tag`` (the head of ``_expected``) is what
+        this reply must be."""
+        kind, payload, _ = self._recv(tag[0])
         self.ipc_calls += 1
-        # only the residual over the child-measured method execution is IPC
-        # overhead — a submit that pays a real activation (device_put of
-        # weights) must not read as pipe/pickle cost
-        self.ipc_wall_s += max(0.0,
-                               time.perf_counter() - t0 - compute_wall)
-        if kind == "prompt_too_long":
-            raise PromptTooLongError(payload)
-        if kind != "ok":
-            raise RuntimeError(
-                f"node {self.node_id} worker error in {method}:\n{payload}")
-        return payload
+        if tag[0] == "poll":
+            self._poll_pending = False
+            if kind != "ok":
+                raise RuntimeError(
+                    f"node {self.node_id} worker error in poll:\n{payload}")
+            out, progress, step_wall, self._cached_signal = payload
+            self.worker_step_wall_s += step_wall
+            self._progress = progress
+            for model, reqs in out.items():
+                self._finished_buf.setdefault(model, []).extend(reqs)
+                self._inflight -= len(reqs)
+        elif tag[0] == "submit":
+            if kind == "prompt_too_long":
+                # typed rejection of an async submit: surfaced to the
+                # gateway via take_submit_errors (the stage finishes
+                # truncated, exactly like the synchronous path)
+                self._inflight -= 1
+                self._submit_errors.append(tag[1])
+            elif kind != "ok":
+                raise RuntimeError(
+                    f"node {self.node_id} worker error in async "
+                    f"submit:\n{payload}")
+        else:                                    # pragma: no cover
+            raise AssertionError(f"unknown async reply tag {tag!r}")
 
     # -------------------------------------------- node surface (gateway API)
     def signal(self):
@@ -280,6 +406,80 @@ class NodeHandle:
 
     def kv_stats(self) -> Dict[str, float]:
         return self._call("kv_stats")
+
+    # ------------------------------------------------- wall-clock free-run
+    def set_continuous(self, on: bool = True) -> None:
+        """Switch the child into (or out of) free-running mode: it steps
+        its engines on its own whenever they hold work and buffers finished
+        requests until the next :meth:`poll_finished`. Used by the gateway's
+        wall clock; virtual runs never enable it."""
+        self._call("continuous", bool(on))
+
+    def has_work(self) -> bool:
+        """Submitted-but-unfinished requests outstanding on this node (the
+        gateway polls only such nodes — an idle worker costs no round
+        trips)."""
+        return self._inflight > 0
+
+    def poll_send(self) -> None:
+        """Arm a drain request at the free-running child without waiting for
+        the reply (at most one poll is outstanding per worker). The child
+        answers at its next engine-step boundary; the gateway folds the
+        reply in with :meth:`drain_ready` on a later loop pass, so the
+        wall-clock dispatch loop NEVER blocks on worker compute. Idle
+        workers are skipped entirely."""
+        if self._poll_pending or self._inflight == 0:
+            return
+        self.wait_ready()
+        self._send("poll", ())
+        self._expected.append(("poll",))
+        self._poll_pending = True
+
+    def drain_ready(self) -> Dict[str, List[Request]]:
+        """Fold every reply already sitting in the pipe (poll reports,
+        async submit acks) into handle state WITHOUT blocking, then return
+        the finished requests accumulated since the last drain."""
+        while self._expected and self._conn.poll(0):
+            self._fold_async(self._expected.popleft())
+        out, self._finished_buf = self._finished_buf, {}
+        return out
+
+    def submit_send(self, model: str, req: Request) -> None:
+        """Asynchronous submit: fire the request and return immediately;
+        the ack (or typed prompt-too-long rejection, surfaced through
+        :meth:`take_submit_errors`) is folded in on a later drain — the
+        pipe's FIFO order keeps reply pairing exact. A synchronous submit
+        blocks until the child's engine-step boundary, which at wide batch
+        sizes would stall the wall-clock dispatch loop for every stage."""
+        self.wait_ready()
+        self._send("submit", (model, req))
+        self._expected.append(("submit", req.req_id))
+        self._inflight += 1
+
+    def take_submit_errors(self) -> List[int]:
+        """Request ids whose async submit was rejected (PromptTooLongError
+        in the child) since the last call; the gateway finishes them
+        truncated, mirroring the synchronous error path."""
+        out, self._submit_errors = self._submit_errors, []
+        return out
+
+    def poll_finished(self) -> Dict[str, List[Request]]:
+        """Blocking poll round trip: arm a poll (if none is outstanding)
+        and wait for the child's report; returns everything finished since
+        the last drain. Used by warmup; the serving loop uses the
+        non-blocking poll_send/drain_ready pair instead."""
+        self.poll_send()
+        while self._poll_pending and self._expected:
+            self._fold_async(self._expected.popleft())
+        out, self._finished_buf = self._finished_buf, {}
+        return out
+
+    def last_signal(self):
+        """The NodeSignal piggybacked on the most recent poll reply (None
+        before the first poll). Under the wall clock the gateway schedules
+        against this boundary-fresh report instead of blocking a synchronous
+        signal/admission round trip per decision."""
+        return self._cached_signal
 
     # ------------------------------------------------------------------ step
     def step_send(self) -> None:

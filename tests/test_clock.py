@@ -1,0 +1,309 @@
+"""Clock plane: VirtualClock event-heap ordering + determinism, WallClock
+monotonicity, clock-enforced run deadlines (typed RunDeadlineExceeded),
+seconds-denominated config shims, and virtual-vs-wall completion parity on
+both node backends."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.data.tracegen import generate_trace
+from repro.serving.clock import (RunDeadlineExceeded, VirtualClock,
+                                 WallClock, make_clock)
+from repro.serving.cluster import (ClusterSpec, LiveJob, LiveStage, NodeSpec,
+                                   build_fleet, build_zoo, jobs_from_trace)
+from repro.serving.gateway import ClusterGateway, GatewayConfig
+from repro.serving.worker import close_fleet
+
+RTT = np.array([[0.001, 0.04], [0.04, 0.001]])
+ZOO_NAMES = ("qwen3-8b",)
+
+
+# ---------------------------------------------------------------- VirtualClock
+
+def test_virtual_clock_ticks_and_now():
+    c = VirtualClock(tick_s=0.05)
+    assert c.now() == 0.0
+    for _ in range(8):
+        c.advance()
+    assert c.tick == 8
+    assert c.now() == pytest.approx(8 * 0.05)
+
+
+def test_virtual_event_heap_schedule_order_within_tick():
+    """Two events due in the same tick release in SCHEDULE order even when
+    their release times invert — this reproduces the pre-clock-plane
+    gateway, which scanned its in-flight dict in insertion order, so it is
+    what keeps virtual runs bit-identical."""
+    c = VirtualClock(tick_s=0.05)
+    c.call_at(0.12, "scheduled-first")       # due later within the tick
+    c.call_at(0.11, "scheduled-second")      # due earlier within the tick
+    assert c.pop_due() == []                 # t = 0: nothing due
+    for _ in range(3):                       # t = 0.15: both due
+        c.advance()
+    assert c.pop_due() == ["scheduled-first", "scheduled-second"]
+    assert c.pop_due() == []                 # events release exactly once
+
+
+def test_virtual_event_due_epsilon():
+    """An event AT a tick boundary releases on that tick (same 1e-9 slack
+    the old per-tick submit_at scan used)."""
+    c = VirtualClock(tick_s=0.05)
+    c.call_at(1 * 0.05, "x")
+    c.advance()
+    assert c.pop_due() == ["x"]
+
+
+def test_virtual_event_heap_determinism():
+    def run():
+        c = VirtualClock(tick_s=0.05)
+        for i in range(20):
+            c.call_at((i * 7 % 13) * 0.03, i)
+        out = []
+        for _ in range(15):
+            out.append(tuple(c.pop_due()))
+            c.advance()
+        return out
+    a, b = run(), run()
+    assert a == b                                      # reproducible
+    assert sorted(x for t in a for x in t) == list(range(20))  # all, once
+
+
+def test_virtual_deadline_seconds_and_ticks():
+    c = VirtualClock(tick_s=0.05)
+    assert not c.expired()                   # no deadline: runs forever
+    c.set_deadline(0.25)                     # = 5 ticks
+    for _ in range(5):
+        assert not c.expired()
+        c.advance()
+    assert c.expired() and c.deadline_s == pytest.approx(0.25)
+    c2 = VirtualClock(tick_s=0.05)
+    c2.set_deadline_ticks(3)                 # exact legacy max_ticks cap
+    for _ in range(3):
+        assert not c2.expired()
+        c2.advance()
+    assert c2.expired()
+
+
+def test_virtual_cadence_matches_tick_modulus():
+    c = VirtualClock(tick_s=0.05)
+    cad = c.cadence(8 * 0.05)                # the old refresh_every=8
+    fired = []
+    for t in range(20):
+        fired.append(cad.due())
+        c.advance()
+    assert fired == [(t % 8 == 0) for t in range(20)]
+
+
+# ------------------------------------------------------------------- WallClock
+
+def _fake_wall():
+    t = [0.0]
+    clock = WallClock(time_fn=lambda: t[0],
+                      sleep_fn=lambda s: t.__setitem__(0, t[0] + s))
+    return clock, t
+
+
+def test_wall_clock_monotonic_real_time():
+    c = WallClock()
+    samples = [c.now() for _ in range(100)]
+    assert all(b >= a for a, b in zip(samples, samples[1:]))
+    assert samples[0] >= 0.0
+
+
+def test_wall_clock_events_release_on_time():
+    c, t = _fake_wall()
+    c.call_at(0.010, "early")
+    c.call_at(0.030, "late")
+    assert c.pop_due() == []                 # t=0: nothing due yet
+    c.advance(until=0.02)                    # sleeps to 0.02
+    assert c.now() == pytest.approx(0.02)
+    assert c.pop_due() == ["early"]          # released, not-before its time
+    c.advance(until=0.05)
+    assert c.pop_due() == ["late"]
+
+
+def test_wall_clock_sleep_is_capped():
+    c, t = _fake_wall()
+    c.advance(until=10.0)                    # far wake-up: one capped sleep
+    assert 0.0 < c.now() <= 0.2
+    c2, _ = _fake_wall()
+    before = c2.now()
+    c2.advance(until=None)                   # free-run pass: no sleep
+    assert c2.now() == before
+
+
+def test_wall_clock_deadline():
+    c, t = _fake_wall()
+    c.set_deadline(1.0)
+    assert not c.expired()
+    t[0] = 1.2
+    assert c.expired() and c.deadline_s == 1.0
+
+
+def test_wall_clock_restart_rebases_pending_events():
+    """restart() re-zeros the epoch; events still pending (stages left in
+    transit when a prior run hit its deadline) keep their REMAINING delay
+    instead of crashing or releasing at stale absolute times."""
+    c, t = _fake_wall()
+    c.call_at(5.0, "pending")            # due 5s from the old epoch
+    t[0] = 3.0                           # 2s of delay remain
+    c.restart()
+    assert c.now() == 0.0
+    assert c.pop_due() == []             # not due yet on the new epoch
+    t[0] = 3.0 + 2.5                     # 2.5s after restart
+    assert c.pop_due() == ["pending"]    # released after its remaining 2s
+
+
+def test_wall_cadence_fires_on_period():
+    c, t = _fake_wall()
+    cad = c.cadence(0.5)
+    assert cad.due()                         # first check fires (tick-0 law)
+    assert not cad.due()
+    t[0] = 0.6
+    assert cad.due() and not cad.due()
+
+
+def test_make_clock_rejects_unknown_mode():
+    assert isinstance(make_clock("virtual", 0.05), VirtualClock)
+    assert isinstance(make_clock("wall", 0.05), WallClock)
+    with pytest.raises(ValueError, match="clock"):
+        make_clock("lamport", 0.05)
+    with pytest.raises(ValueError, match="clock"):
+        ClusterGateway([], RTT, policy="fcfs",
+                       cfg=GatewayConfig(clock="lamport"))
+
+
+# ------------------------------------------------- config shims + run deadline
+
+def test_config_seconds_shims_and_deprecation():
+    # defaults: the legacy tick values expressed in seconds
+    assert GatewayConfig().resolved_seconds() == \
+        pytest.approx((0.1, 0.5, 0.4))
+    # overriding a deprecated tick field still works, with a warning
+    with pytest.warns(DeprecationWarning, match="preempt_gain_ticks"):
+        gain, _, _ = GatewayConfig(
+            preempt_gain_ticks=4.0).resolved_seconds()
+    assert gain == pytest.approx(0.2)
+    with pytest.warns(DeprecationWarning, match="refresh_every"):
+        _, _, refresh = GatewayConfig(refresh_every=4).resolved_seconds()
+    assert refresh == pytest.approx(0.2)
+    # seconds-denominated fields win, silently
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        gain, cool, refresh = GatewayConfig(
+            preempt_gain_s=0.3, preempt_cooldown_s=0.9,
+            refresh_every_s=1.0).resolved_seconds()
+    assert (gain, cool, refresh) == (0.3, 0.9, 1.0)
+
+
+@pytest.fixture(scope="module")
+def zoo_host():
+    return build_zoo(ZOO_NAMES, seed=1)
+
+
+def _inproc_fleet(zoo_host, specs):
+    zoo, host = zoo_host
+    return build_fleet(ClusterSpec(nodes=tuple(specs), rtt_s=RTT,
+                                   model_names=ZOO_NAMES), zoo=zoo, host=host)
+
+
+def test_run_deadline_exceeded_is_typed(zoo_host):
+    """A run cut short by max_run_s reports a typed RunDeadlineExceeded in
+    its metrics (instead of the old silent max_ticks truncation)."""
+    from repro.core.predictor.features import StageObservation
+    obs = StageObservation(app=0, role=0, position=0.0, invocation_idx=0,
+                           tools_available=0, cot=False, prompt_len=32,
+                           model_id=0, text="s", src_cluster=0)
+    job = LiveJob(0, "t", True, 0.0, [
+        LiveStage(stage_id=0, job_id=0, deps=[], obs=obs, interactive=True,
+                  tokens=[1, 2, 3, 4], max_new=40)])
+    fleet = _inproc_fleet(zoo_host, [NodeSpec(0)])
+    gw = ClusterGateway(fleet, RTT, policy="fcfs",
+                        cfg=GatewayConfig(max_run_s=0.2))   # 4 ticks: hopeless
+    m = gw.run([job])
+    assert m.run_outcome == "deadline_exceeded"
+    assert isinstance(m.run_deadline, RunDeadlineExceeded)
+    assert m.run_deadline.max_run_s == pytest.approx(0.2)
+    assert m.run_deadline.unfinished_jobs == 1
+    assert m.finished_jobs == 0
+    row = m.row()                            # JSON-able nested outcome
+    assert row["run_deadline"]["unfinished_jobs"] == 1
+    # a completed run stays "completed" with no deadline record
+    fleet2 = _inproc_fleet(zoo_host, [NodeSpec(0)])
+    gw2 = ClusterGateway(fleet2, RTT, policy="fcfs")
+    m2 = gw2.run([LiveJob(1, "t", True, 0.0, [
+        LiveStage(stage_id=1, job_id=1, deps=[], obs=obs, interactive=True,
+                  tokens=[1, 2, 3], max_new=4)])])
+    assert m2.run_outcome == "completed" and m2.run_deadline is None
+
+
+def test_worker_xla_flags_injection():
+    """A worker spawned with WorkerSpec.xla_flags applies them before its
+    XLA client forms (the wall-fleet threading knob) and still serves."""
+    from repro.serving.engine import Request
+    from repro.serving.worker import NodeHandle, WorkerSpec
+    h = NodeHandle(WorkerSpec(
+        node_id=3, cluster_id=0, model_names=ZOO_NAMES, max_slots=2,
+        s_max=32, xla_flags="--xla_force_host_platform_device_count=1"))
+    try:
+        h.wait_ready()
+        h.submit(ZOO_NAMES[0], Request(req_id=1, tokens=[1, 2, 3],
+                                       max_new=3))
+        out = {}
+        for _ in range(30):
+            for _, reqs in h.step().items():
+                for r in reqs:
+                    out[r.req_id] = r
+            if out:
+                break
+        assert len(out[1].out) == 3
+    finally:
+        h.close()
+
+
+# --------------------------------------------------- virtual-vs-wall parity
+
+def _trace_jobs():
+    return jobs_from_trace(generate_trace(2, rate=2.0, seed=5),
+                           n_clusters=2, prompt_cap=8, gen_cap=6, seed=2)
+
+
+def _completions(gw):
+    ev = gw.telemetry.events
+    done = {sid for sid, e in ev.items() if e.finish_t > 0}
+    return done, {sid: ev[sid].out_len for sid in done}
+
+
+def test_virtual_vs_wall_parity_both_backends(zoo_host):
+    """The clock changes WHEN things happen, never WHAT completes: a small
+    trace served under (virtual, inproc), (wall, inproc) and (wall,
+    process) finishes the identical stage set with identical per-stage
+    token counts (ordering-tolerant — wall timing is machine-dependent)."""
+    specs = [NodeSpec(0, max_slots=2), NodeSpec(1, max_slots=2)]
+    results = {}
+    for clock, backend in (("virtual", "inproc"), ("wall", "inproc"),
+                           ("wall", "process")):
+        if backend == "process":
+            fleet = build_fleet(ClusterSpec(nodes=tuple(specs), rtt_s=RTT,
+                                            model_names=ZOO_NAMES),
+                                backend="process")
+        else:
+            fleet = _inproc_fleet(zoo_host, specs)
+        try:
+            gw = ClusterGateway(
+                fleet, RTT, policy="fcfs",
+                cfg=GatewayConfig(clock=clock, node_backend=backend,
+                                  max_run_s=None if clock == "virtual"
+                                  else 300.0))
+            m = gw.run(_trace_jobs())
+            assert m.run_outcome == "completed", (clock, backend)
+            assert m.clock == clock
+            results[(clock, backend)] = _completions(gw)
+        finally:
+            close_fleet(fleet)
+    ref_done, ref_tokens = results[("virtual", "inproc")]
+    assert len(ref_done) > 0
+    for key, (done, tokens) in results.items():
+        assert done == ref_done, key         # identical completion SET
+        assert tokens == ref_tokens, key     # identical per-stage tokens
