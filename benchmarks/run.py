@@ -13,6 +13,10 @@
 from __future__ import annotations
 
 import argparse
+import hashlib
+import json
+import platform
+import subprocess
 import time
 import traceback
 
@@ -26,7 +30,8 @@ SMOKE_POLICIES = ("fcfs", "maestro")
 def _register(mode: str, backend: str = "inproc",
               clock: str = "virtual") -> None:
     from benchmarks import (activation, colocation, fitness, gateway, kernels,
-                            memory, prediction, preemption, scheduling)
+                            memory, prediction, preemption, prefix_reuse,
+                            scheduling)
     fast = mode != "full"
     smoke = mode == "smoke"
     if clock == "wall":
@@ -46,6 +51,9 @@ def _register(mode: str, backend: str = "inproc",
             policies=SMOKE_POLICIES if smoke else None, backend=backend)
     BENCHES.update({
         "gateway": gateway_bench,
+        "prefix_reuse": lambda: prefix_reuse.main(
+            n_jobs={"full": 96, "fast": 24, "smoke": 10}[mode], fast=fast,
+            backend=backend, include_wall=(mode == "full")),
         "table3_6_7_prediction": lambda: prediction.main(
             n_jobs=800 if fast else 2500),
         "fig7_scheduling": lambda: scheduling.main(
@@ -60,6 +68,28 @@ def _register(mode: str, backend: str = "inproc",
         "fig10_activation": lambda: activation.main(fast=fast),
         "kernels": lambda: kernels.main(fast=fast),
     })
+
+
+def repro_stamp(payload: dict) -> dict:
+    """Reproducibility stamp for persisted BENCH payloads: the exact source
+    revision, the host that produced the row, and a fingerprint of the
+    payload's own config scalars (everything but the result rows) — so two
+    BENCH files are comparable iff their stamps match."""
+    try:
+        sha = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True, timeout=10,
+                             check=True).stdout.strip()
+        dirty = bool(subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip())
+    except Exception:
+        sha, dirty = "unknown", False
+    cfg = {k: v for k, v in payload.items()
+           if not isinstance(v, (list, dict)) or k in ("policies", "zoo")}
+    fp = hashlib.sha256(
+        json.dumps(cfg, sort_keys=True, default=str).encode()).hexdigest()
+    return {"git_sha": sha, "git_dirty": dirty, "host": platform.node(),
+            "config_fingerprint": fp[:16]}
 
 
 def main() -> None:
@@ -101,6 +131,7 @@ def main() -> None:
                         suffix = "_wall"
                     elif payload.get("node_backend", "inproc") != "inproc":
                         suffix = f"_{payload['node_backend']}"
+                    payload["repro"] = repro_stamp(payload)
                 try:
                     save_result(f"BENCH_{name}{suffix}", payload)
                 except TypeError as e:   # non-JSON payload: keep bench green

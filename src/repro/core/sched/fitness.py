@@ -47,6 +47,9 @@ class NodeSignal:
     warm_models: Dict[str, float]      # model -> T_act seconds (Eq. 6)
     supports_vmm: bool = True          # elastic-KV capability signal
     total_hbm: float = 16e9
+    # most-recent prefix-page digests held by the node's prefix index
+    # (compact content summary; rides the existing signal snapshot)
+    prefix_digests: Tuple[str, ...] = ()
 
 
 @dataclasses.dataclass
@@ -58,6 +61,8 @@ class StageRequest:
     src_cluster: int
     t_exec: float                      # Eq. 2 (node-invariant)
     high_concurrency: bool = False
+    # chained page digests of the stage's prompt (empty: no prefix routing)
+    prefix_digests: Tuple[str, ...] = ()
 
 
 @dataclasses.dataclass
@@ -68,6 +73,9 @@ class FitnessWeights:
     mu: float = 1.0
     # interactive stages weight the network term up (§III.D)
     w_net_interactive: float = 0.75
+    # prefix-affinity term: reward nodes already holding the stage's prompt
+    # prefix (0 keeps scoring identical to the base router)
+    w_prefix: float = 0.0
 
 
 class FitnessRouter:
@@ -102,8 +110,25 @@ class FitnessRouter:
         self.normalizer.observe("t_ready", t_ready)
         self.normalizer.observe("c_deg", c_deg)
         a = self.affinity(rtt, sig.headroom, req.r_need, req.interactive)
+        a += self.w.w_prefix * self.prefix_affinity(sig, req)
         return (a - self.w.lam * self.normalizer.norm("t_ready", t_ready)
                 - self.w.mu * self.normalizer.norm("c_deg", c_deg))
+
+    def prefix_affinity(self, sig: NodeSignal, req: StageRequest) -> float:
+        """Fraction of the stage's prefix chain the node already holds.
+
+        Digests chain (page i commits to pages 0..i), so the walk stops at
+        the first digest the node does not advertise — matching exactly the
+        pages the engine could alias on arrival."""
+        if not self.w.w_prefix or not req.prefix_digests:
+            return 0.0
+        held = set(sig.prefix_digests)
+        n = 0
+        for d in req.prefix_digests:
+            if d not in held:
+                break
+            n += 1
+        return n / len(req.prefix_digests)
 
     def select(self, req: StageRequest, nodes: Sequence[NodeSignal],
                t_act_of, c_deg_of) -> Optional[Tuple[NodeSignal, float]]:

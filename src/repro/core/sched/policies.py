@@ -166,9 +166,11 @@ class Maestro(SchedPolicy):
     predictor is declared ONLY on its PolicySpec (see ``register`` below)."""
     name = "maestro"
 
-    def __init__(self, predictor, gamma: float = 0.25, preempt: bool = True):
+    def __init__(self, predictor, gamma: float = 0.25, preempt: bool = True,
+                 weights=None):
         self.predictor = predictor
         self.gamma = gamma
+        self.weights = weights          # Optional[FitnessWeights]
         self.requeue_at_boundary = preempt
         self.ctl: Optional[MaestroController] = None
         self._cache: Dict[int, Dict[str, float]] = {}
@@ -178,7 +180,8 @@ class Maestro(SchedPolicy):
         self._guard = SRTFQueue(preempt_gain_s=sub.preempt_gain_s,
                                 cooldown_s=sub.preempt_cooldown_s)
         self.ctl = MaestroController(self.predictor, sub.profiles, sub.rtt_s,
-                                     gamma=self.gamma, queue=self._guard)
+                                     weights=self.weights, gamma=self.gamma,
+                                     queue=self._guard)
         self._cache = {}
         # batch-precompute per-stage predictions when the substrate knows
         # its stages up-front (same inputs the dispatch gateway would see at
@@ -227,13 +230,19 @@ class Maestro(SchedPolicy):
     def predicted_len(self, sub, stage):
         return self._pred(sub, stage)["l_hat"]
 
+    def _prefix_digests(self, sub, stage) -> Tuple[str, ...]:
+        """Prompt prefix chain for routing; the base hierarchy is
+        prefix-blind (see :class:`MaestroPrefix`)."""
+        return ()
+
     def route(self, sub, stage, r_need):
         p = self._pred(sub, stage)
         prof = sub.profiles[stage.model]
         req = StageRequest(
             stage_id=stage.stage_id, model=stage.model, r_need=r_need,
             interactive=stage.interactive, src_cluster=stage.obs.src_cluster,
-            t_exec=prof.t_exec(stage.prompt_len, p["l_hat"]))
+            t_exec=prof.t_exec(stage.prompt_len, p["l_hat"]),
+            prefix_digests=self._prefix_digests(sub, stage))
         # feasibility filter FIRST (Alg. 3 line 3) — eviction-aware, so a
         # node admissible only via degradation stays in and is ranked by its
         # C_deg — then rank by S(N, T)
@@ -285,6 +294,23 @@ class BinPackOnly(Maestro):
 class MaestroAff(Maestro):
     """Table VIII 'Maestro-Aff': full fitness scoring (gamma=0.25)."""
     name = "maestro-aff"
+
+
+class MaestroPrefix(Maestro):
+    """Maestro + prefix-affinity routing: successor stages are steered to
+    the node whose prefix index already holds their shared prompt prefix
+    (system prompt / role template / carried conversation), so the engine
+    aliases cached KV pages instead of re-prefilling them."""
+    name = "maestro-prefix"
+
+    def __init__(self, predictor, gamma: float = 0.25,
+                 w_prefix: float = 0.6):
+        from repro.core.sched.fitness import FitnessWeights
+        super().__init__(predictor, gamma=gamma,
+                         weights=FitnessWeights(w_prefix=w_prefix))
+
+    def _prefix_digests(self, sub, stage):
+        return tuple(sub.prefix_digests(stage))
 
 
 # ---------------------------------------------------------------------------
@@ -342,3 +368,6 @@ register("binpack", lambda predictor=None: BinPackOnly(predictor),
          needs_predictor=True, doc="Table VIII network-blind packing")
 register("maestro-aff", lambda predictor=None: MaestroAff(predictor),
          needs_predictor=True, doc="Table VIII full fitness scoring")
+register("maestro-prefix", lambda predictor=None: MaestroPrefix(predictor),
+         needs_predictor=True,
+         doc="maestro + prefix-affinity routing over cached KV prefixes")

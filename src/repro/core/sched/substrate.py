@@ -100,3 +100,8 @@ class Substrate(Protocol):
     def ready_since(self, stage_id: int) -> float:
         """Substrate time the stage entered the global queue (aging input);
         +inf when unknown (treated as zero wait)."""
+
+    def prefix_digests(self, stage: SchedStage) -> Sequence[str]:
+        """Chained prefix-page digests of the stage's prompt, for
+        prefix-affinity routing; () on planes without token-level prompts
+        (the trace simulator) or when the prefix cache is disabled."""

@@ -41,6 +41,13 @@ class StageRecord:
     # ground truth (hidden from the scheduler until completion)
     true_len: int
     tool_call: bool
+    # shared-prefix structure (team traces only): ordered (block_key,
+    # n_tokens) pairs describing the prompt as a concatenation of named
+    # blocks. Stages whose block sequences share a prefix share the SAME
+    # leading prompt tokens when materialized (``jobs_from_trace`` derives
+    # each block's token ids from its key alone), which is what the
+    # cross-stage prefix cache exploits. None for classic traces.
+    prompt_blocks: Optional[Tuple[Tuple[str, int], ...]] = None
 
     @property
     def model(self) -> str:
@@ -141,6 +148,91 @@ def generate_trace(n_jobs: int, rate: float = 1.0,
                 ids += prev
             tmpl_to_last[ti] = ids
         jobs.append(JobRecord(job_id=j, app=app.name,
+                              interactive=app.interactive,
+                              arrival_s=t, stages=stages))
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# Multi-agent TEAM traces: workflows with explicit shared-prefix structure
+# ---------------------------------------------------------------------------
+
+# (shape name, app template name it reports as, ((role, deps), ...))
+# Conversation-style topologies: every stage's prompt embeds its parent's
+# full transcript (system prompt + every upstream turn) plus its own role
+# header and turn — the LLM-MAS pattern that makes cross-stage KV reuse pay.
+_TEAM_SHAPES: Tuple[Tuple[str, str, Tuple[Tuple[str, Tuple[int, ...]], ...]],
+                    ...] = (
+    ("pipeline", "document_writing",
+     (("planner", ()), ("solver", (0,)), ("critic", (1,)),
+      ("summarizer", (2,)))),
+    ("fanout", "news_collection",
+     (("supervisor", ()), ("worker", (0,)), ("worker", (0,)),
+      ("worker", (0,)), ("summarizer", (1, 2, 3)))),
+    ("debate", "qa_assistant",
+     (("planner", ()), ("solver", (0,)), ("critic", (0,)),
+      ("summarizer", (1, 2)))),
+)
+
+
+def generate_team_trace(n_jobs: int, rate: float = 2.0, seed: int = 0,
+                        n_teams: int = 3, sys_tokens: int = 32,
+                        role_tokens: int = 8, turn_tokens: int = 12
+                        ) -> List[JobRecord]:
+    """Agent-team workflows whose prompts carry explicit shared-prefix
+    structure (``StageRecord.prompt_blocks``):
+
+    - every job of team ``t`` opens with the same ``team{t}:sys`` system
+      block, so cross-JOB reuse exists within a team;
+    - each stage's prompt is its parent's block sequence plus a reply
+      block (shared by siblings of the same parent — fan-out workers and
+      debate branches diverge only at their role header), a role block and
+      a unique turn block, so cross-STAGE reuse exists along every DAG edge.
+
+    Block token ids are derived from the block key alone (see
+    ``jobs_from_trace``), so equal keys materialize to identical tokens.
+    ``model_id`` alternates over the attention models of the live zoo
+    (1 + team % 2 -> qwen3-8b / starcoder2-15b under the default 3-model
+    fleet); the SSM family keeps serving the classic trace mix."""
+    rng = np.random.default_rng(seed)
+    jobs: List[JobRecord] = []
+    t = 0.0
+    sid = 0
+    for j in range(n_jobs):
+        t += rng.exponential(1.0 / rate)
+        team = j % n_teams
+        _, app_name, shape = _TEAM_SHAPES[int(rng.integers(
+            0, len(_TEAM_SHAPES)))]
+        app = APPS[APP_ID[app_name]]
+        stages: List[StageRecord] = []
+        local_ids: List[int] = []
+        for li, (role, deps) in enumerate(shape):
+            dep_ids = [local_ids[d] for d in deps]
+            if dep_ids:
+                parent = stages[deps[0]]       # one stage per shape slot
+                blocks = list(parent.prompt_blocks)
+                blocks.append((f"reply:{j}:{parent.stage_id}", turn_tokens))
+            else:
+                blocks = [(f"team{team}:sys", sys_tokens)]
+            blocks.append((f"role:{role}", role_tokens))
+            blocks.append((f"turn:{j}:{sid}", turn_tokens))
+            complexity = float(rng.random())
+            L = int(np.clip(rng.lognormal(np.log(60.0), 0.5), 4, 512))
+            n_prompt = sum(n for _, n in blocks)
+            obs = StageObservation(
+                app=APP_ID[app_name], role=ROLE_ID[role],
+                position=li / max(len(shape) - 1, 1),
+                invocation_idx=li, tools_available=0, cot=False,
+                prompt_len=n_prompt * 32, model_id=1 + (team % 2),
+                text=_prompt_text(rng, role, complexity, n_prompt * 32),
+                src_cluster=team % 3)
+            stages.append(StageRecord(
+                job_id=j, stage_id=sid, deps=dep_ids, obs=obs,
+                interactive=app.interactive, true_len=L, tool_call=False,
+                prompt_blocks=tuple(blocks)))
+            local_ids.append(sid)
+            sid += 1
+        jobs.append(JobRecord(job_id=j, app=app_name,
                               interactive=app.interactive,
                               arrival_s=t, stages=stages))
     return jobs

@@ -339,6 +339,46 @@ def attn_decode_paged(p, x, cfg: ArchConfig, ctx: ShardingCtx,
     return ctx.cs(o @ p["wo"], "batch", None, None), k_pages, v_pages
 
 
+def attn_suffix(p, x, cfg: ArchConfig, ctx: ShardingCtx,
+                positions: jax.Array, pk: jax.Array, pv: jax.Array,
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill only the suffix of a prompt against cached prefix KV.
+
+    x [B,S,D] the unmatched suffix tokens; positions [B,S] their absolute
+    positions (prefix length + arange); pk/pv [P,Hkv,hd] the prefix KV
+    gathered from arena rows (already roped at absolute positions when the
+    prefix itself was prefilled). Deliberately mirrors the exact per-row
+    arithmetic of :func:`blockwise_attention` (io-dtype score einsum with
+    head-repeated K/V, f32 softmax, ``maximum(m, -1e30)``) so that decode
+    outputs with the prefix cache on are bitwise identical to a full
+    prefill. Returns (output [B,S,D], k_new, v_new [B,S,Hkv,hd]).
+    """
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q, k_new, v_new = _project_qkv(p, h, h, cfg, cross=False)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    B = x.shape[0]
+    pkb = jnp.broadcast_to(pk[None].astype(k_new.dtype), (B,) + pk.shape)
+    pvb = jnp.broadcast_to(pv[None].astype(v_new.dtype), (B,) + pv.shape)
+    k = jnp.concatenate([pkb, k_new], axis=1)
+    v = jnp.concatenate([pvb, v_new], axis=1)
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    kpos = jnp.arange(k.shape[1])
+    mask = positions[:, :, None] >= kpos[None, None, :]
+    scores = jnp.where(mask[:, None], scores, -jnp.inf)
+    m = jnp.maximum(jnp.max(scores, axis=-1, keepdims=True), -1e30)
+    p_ = jnp.exp(scores - m)
+    l = jnp.sum(p_, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bkhd->bqhd", (p_ / l).astype(v.dtype), v)
+    out = o.reshape(B, x.shape[1], H * hd) @ p["wo"]
+    return ctx.cs(out, "batch", "sp", None), k_new, v_new
+
+
 # ---------------------------------------------------------------------------
 # FFN
 # ---------------------------------------------------------------------------

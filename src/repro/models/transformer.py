@@ -236,6 +236,66 @@ class Model:
         logits = (last @ self.unembed_weight(params)).astype(jnp.float32)
         return logits, caches
 
+    @property
+    def supports_prefix_reuse(self) -> bool:
+        """Prefix-cache eligibility: suffix prefill is only defined for
+        pure causal self-attention stacks (every slot an attn mixer, no
+        cross-attention, no encoder). SSM/hybrid state is positionally
+        recurrent and cannot resume from cached pages."""
+        cfg = self.cfg
+        return (cfg.encoder is None and cfg.cross_attn is None
+                and all(mx == "attn" and not cross
+                        for mx, _, cross in self.kinds))
+
+    def prefill_suffix(self, params, tokens, prefix_k, prefix_v):
+        """Prefill only the unmatched suffix of a prompt.
+
+        ``tokens`` [B,S] are the suffix tokens; ``prefix_k``/``prefix_v``
+        [L,P,Hkv,hd] the cached prefix KV in the arena's stacked-layer
+        layout (slot ``a``, group ``g`` at layer ``a * n_groups + g``, the
+        same layout :meth:`paged_kv_layout` publishes). Per-row arithmetic
+        matches :meth:`prefill` exactly (see ``layers.attn_suffix``), so the
+        resulting logits and suffix KV are bitwise identical to a full
+        prefill of prefix+suffix. Returns (last-token logits [B,Vp] f32,
+        k_sfx, v_sfx [L,B,S,Hkv,hd]).
+        """
+        assert self.supports_prefix_reuse, self.cfg.name
+        cfg = self.cfg
+        A, G = len(self.kinds), self.n_groups
+        P_pre = prefix_k.shape[1]
+        S = tokens.shape[1]
+        x = self.embed(params, tokens)
+        positions = P_pre + jnp.arange(S)[None, :]
+        # [A*G, P, Hkv, hd] -> [G, A, P, Hkv, hd] so groups scan on axis 0
+        shp = (A, G) + prefix_k.shape[1:]
+        pk_gs = prefix_k.reshape(shp).transpose(1, 0, 2, 3, 4)
+        pv_gs = prefix_v.reshape(shp).transpose(1, 0, 2, 3, 4)
+
+        def body(x, inp):
+            gp, pk_g, pv_g = inp
+            ks, vs = [], []
+            for i, (mixer, ffn, _) in enumerate(self.kinds):
+                sp = gp[f"slot{i}"]
+                o, k_new, v_new = L.attn_suffix(sp["attn"], x, cfg, self.ctx,
+                                                positions, pk_g[i], pv_g[i])
+                x = x + o
+                ks.append(k_new)
+                vs.append(v_new)
+                if ffn == "dense":
+                    x = x + L.ffn_apply(sp["ffn"], x, cfg, self.ctx,
+                                        gelu=cfg.ffn_gelu)
+                elif ffn == "moe":
+                    x = x + MOE.moe_apply(sp["moe"], x, cfg, self.ctx)
+            return x, (jnp.stack(ks), jnp.stack(vs))
+
+        x, (k_ys, v_ys) = flags.scan(body, x, (params["groups"], pk_gs, pv_gs))
+        x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+        logits = (x[:, -1] @ self.unembed_weight(params)).astype(jnp.float32)
+        # ys [G, A, B, S, Hkv, hd] -> stacked-layer [A*G, B, S, Hkv, hd]
+        k_sfx = k_ys.transpose(1, 0, 2, 3, 4, 5).reshape((A * G,) + k_ys.shape[2:])
+        v_sfx = v_ys.transpose(1, 0, 2, 3, 4, 5).reshape((A * G,) + v_ys.shape[2:])
+        return logits, k_sfx, v_sfx
+
     # ---------------------------------------------------------------- decode
     def _group_decode(self, x, gp, gc, positions):
         cfg, ctx = self.cfg, self.ctx

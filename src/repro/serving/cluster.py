@@ -9,6 +9,7 @@ gateway's deterministic virtual clock rather than wall-clock sleeps.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -32,6 +33,10 @@ class NodeSpec:
     hbm_budget: float = 1.2e9
     max_slots: int = 4
     s_max: int = 64
+    # cross-stage prefix-cache plane (off by default: disabled fleets stay
+    # bit-identical to pre-prefix-cache behavior)
+    prefix_cache: bool = False
+    prefix_cache_pages: int = 256
 
 
 @dataclasses.dataclass
@@ -89,6 +94,9 @@ def build_fleet(spec: Optional[ClusterSpec] = None,
                        model_names=tuple(spec.model_names),
                        hbm_budget=ns.hbm_budget, max_slots=ns.max_slots,
                        s_max=ns.s_max, seed=seed,
+                       prefix_cache=ns.prefix_cache or None,
+                       prefix_cache_pages=(ns.prefix_cache_pages
+                                           if ns.prefix_cache else None),
                        xla_flags=worker_xla_flags)
             for nid, ns in enumerate(spec.nodes)])
     if backend != "inproc":
@@ -100,7 +108,9 @@ def build_fleet(spec: Optional[ClusterSpec] = None,
     for nid, ns in enumerate(spec.nodes):
         fleet.append(NodeRuntime(nid, ns.cluster_id, zoo, host,
                                  hbm_budget=ns.hbm_budget,
-                                 max_slots=ns.max_slots, s_max=ns.s_max))
+                                 max_slots=ns.max_slots, s_max=ns.s_max,
+                                 prefix_cache=ns.prefix_cache,
+                                 prefix_cache_pages=ns.prefix_cache_pages))
     return fleet
 
 
@@ -131,13 +141,28 @@ class LiveJob:
     deadline_s: float = 0.0       # filled by the gateway's SLO profiler
 
 
+def _block_tokens(key: str, n: int, vocab: int) -> List[int]:
+    """Token ids of a named prompt block, derived from the key ALONE (an
+    rng seeded from the key's hash) — equal keys materialize to identical
+    tokens in any job/stage, which is precisely the shared-prefix property
+    the cross-stage prefix cache exploits. Does not touch the trace-level
+    rng, so classic (block-free) traces stay byte-identical."""
+    h = hashlib.blake2b(key.encode(), digest_size=8).digest()
+    r = np.random.default_rng(int.from_bytes(h, "big"))
+    return [int(x) for x in r.integers(0, vocab, n)]
+
+
 def jobs_from_trace(trace_jobs: Sequence[JobRecord], vocab: int = 512,
                     prompt_cap: int = 16, gen_cap: int = 16,
                     n_clusters: int = 3, seed: int = 0) -> List[LiveJob]:
     """Instantiate real token payloads for a generated trace. Prompt/output
     lengths are capped so tiny smoke models execute quickly; the ORIGINAL
     observation (with its uncapped prompt_len and semantic text) is kept, so
-    the predictor and router see the workload the trace describes."""
+    the predictor and router see the workload the trace describes.
+
+    Stages carrying ``prompt_blocks`` (team traces) get their tokens from
+    the named blocks instead of the shared rng: block-structured prompts
+    with identical leading blocks share identical leading tokens."""
     rng = np.random.default_rng(seed)
     out: List[LiveJob] = []
     for j in trace_jobs:
@@ -148,11 +173,18 @@ def jobs_from_trace(trace_jobs: Sequence[JobRecord], vocab: int = 512,
                 obs = dataclasses.replace(obs,
                                           src_cluster=obs.src_cluster
                                           % n_clusters)
-            p = int(np.clip(s.obs.prompt_len // 32, 4, prompt_cap))
+            blocks = getattr(s, "prompt_blocks", None)
+            if blocks:
+                tokens: List[int] = []
+                for key, n in blocks:
+                    tokens += _block_tokens(key, n, vocab)
+            else:
+                p = int(np.clip(s.obs.prompt_len // 32, 4, prompt_cap))
+                tokens = list(rng.integers(0, vocab, p))
             stages.append(LiveStage(
                 stage_id=s.stage_id, job_id=j.job_id, deps=list(s.deps),
                 obs=obs, interactive=s.interactive,
-                tokens=list(rng.integers(0, vocab, p)),
+                tokens=tokens,
                 max_new=int(np.clip(s.true_len // 16, 4, gen_cap)),
                 nominal_len=int(s.true_len)))
         out.append(LiveJob(job_id=j.job_id, app=j.app,

@@ -52,18 +52,27 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     eos: Optional[int] = None
     truncated: bool = False               # finished early (KV exhausted)
+    prefill_avoided: int = 0              # prompt tokens served from cache
 
 
 class Engine:
     def __init__(self, model: Model, params, accountant: MemoryAccountant,
                  max_slots: int = 4, s_max: int = 256,
                  page_tokens: int = 16, arena: Optional[KVArena] = None,
-                 kv_backend: Optional[str] = None):
+                 kv_backend: Optional[str] = None, prefix_cache=None,
+                 prefix_ns: Optional[str] = None):
         """``arena``: the node-shared physical page store (a private one is
         created for standalone engines). ``kv_backend``: "pallas" | "ref" |
         "dense" — default picks the Pallas paged kernel on TPU and the jnp
         reference elsewhere; models without self-attention KV always run
-        "dense" (state-only)."""
+        "dense" (state-only). ``prefix_cache``: None/False (off, the
+        default — disabled runs stay bit-identical), True, or a
+        :class:`~repro.serving.prefix_cache.PrefixCacheConfig`; only takes
+        effect on paged engines whose model supports prefix reuse.
+        ``prefix_ns``: digest namespace for the prefix index — the fleet
+        passes the SERVING model name here so gateway-side request digests
+        (computed from the same name) match the node's advertised index;
+        defaults to the model config name for standalone engines."""
         self.model = model
         self.params = params
         self.acc = accountant
@@ -93,6 +102,16 @@ class Engine:
             model.cfg.name, self.pool, s_max=s_max,
             n_layers=n_layers if self.paged else 0,
             n_kv_heads=Hkv, head_dim=hd, dtype=kv_dtype)
+        self._pc = None
+        self._pc_ns = prefix_ns or model.cfg.name
+        if prefix_cache:
+            from repro.serving.prefix_cache import PrefixCacheConfig
+            pc_cfg = (prefix_cache if isinstance(prefix_cache,
+                                                 PrefixCacheConfig)
+                      else PrefixCacheConfig())
+            if pc_cfg.enabled and self.paged and model.supports_prefix_reuse:
+                self._pc = self.arena.enable_prefix_cache(accountant, pc_cfg)
+        self._hits: Dict[int, Any] = {}
         self.rho = RhoEstimator()
         self.waiting: List[Request] = []
         self.active: Dict[int, Request] = {}
@@ -145,6 +164,8 @@ class Engine:
                    if (req := self.evict(rid)) is not None]
         self.waiting[:0] = evicted     # requeue ahead, original order kept
         self.binding.release_all()
+        if self._pc is not None:       # slept models give back their pins
+            self._pc.flush_model(self._pc_ns)
         if self.cache is not None:
             self.cache = None
             if self._state_bytes:
@@ -173,9 +194,25 @@ class Engine:
             # block tables are sized for exactly ceil(s_max/page) pages)
             need_tokens = min(max(int(need / self.alpha),
                                   len(req.tokens) + 1), self.s_max)
+            hit = alias = None
+            if self._pc is not None:
+                hit = self._prefix_lookup(req)
+                alias = list(hit.rows)
+                if hit.partial_row is not None:
+                    alias.append(hit.partial_row)
+                alias = alias or None
             if not self.binding.alloc_seq(req.req_id, self.model.cfg.name,
-                                          need_tokens):
+                                          need_tokens, alias_rows=alias):
                 break   # memory-infeasible: reject-for-now (backpressure)
+            if hit is not None:
+                if hit.partial_row is not None:
+                    # the divergent tail lands mid-page: privatise that page
+                    # (copy-on-write) before suffix prefill overwrites it —
+                    # the index pin guarantees the row is shared, so this
+                    # always copies
+                    if self.binding.make_private(req.req_id, len(hit.rows)):
+                        self._pc.cow_copies += 1
+                self._hits[req.req_id] = hit
             self.waiting.pop(0)
             slot = self.free_slots.pop()
             self.slot_of[req.req_id] = slot
@@ -184,10 +221,41 @@ class Engine:
             admitted.append(req)
         return admitted
 
+    def _prefix_lookup(self, req: Request):
+        """Match the prompt against the node prefix index, capped so the
+        final prompt token always runs through prefill (its logit seeds
+        decoding)."""
+        from repro.serving.prefix_cache import page_digests
+        name = self._pc_ns
+        digs = page_digests(req.tokens, self.page_tokens, name)
+        m = self._pc.match(name, digs, req.tokens, self.page_tokens)
+        P = len(req.tokens)
+        if m.n_full_tokens >= P:          # whole prompt cached: keep 1 page
+            m.rows.pop()
+            m.n_full_tokens -= self.page_tokens
+            m.partial_row, m.partial_overlap = None, 0
+        if m.partial_row is not None:
+            m.partial_overlap = min(m.partial_overlap,
+                                    P - 1 - m.n_full_tokens)
+            if m.partial_overlap <= 0:
+                m.partial_row, m.partial_overlap = None, 0
+        m.digests = digs
+        return m
+
     # -------------------------------------------------------------- prefill
     def _prefill(self, req: Request) -> None:
         self._ensure_cache()
         slot = self.slot_of[req.req_id]
+        hit = self._hits.pop(req.req_id, None)
+        if hit is not None and hit.tokens_matched > 0:
+            self._prefill_suffix(req, hit, slot)
+        else:
+            self._prefill_full(req, slot)
+        if self._pc is not None:
+            digs = (hit.digests if hit is not None else None)
+            self._index_prompt(req, digs)
+
+    def _prefill_full(self, req: Request, slot: int) -> None:
         toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
         logits, cache = self.model.prefill(self.params, toks,
                                            req.extras or {})
@@ -221,6 +289,45 @@ class Engine:
                     self.cache[name][kname] = write_state(tgt, arr)
         self.positions[slot] = P
         req.out.append(int(jnp.argmax(logits[0])))
+
+    def _prefill_suffix(self, req: Request, hit, slot: int) -> None:
+        """Cache-hit prefill: gather matched prefix KV from the arena rows
+        this sequence aliases, run the forward only over the unmatched
+        suffix, and scatter the suffix KV behind the prefix."""
+        M = hit.tokens_matched
+        plane = self.binding.plane
+        L = self.binding.n_layers
+        page = self.page_tokens
+        n_pages = -(-M // page)
+        idx = jnp.asarray(self.binding.seq_rows(req.req_id)[:n_pages],
+                          jnp.int32)
+        tail = plane.k.shape[3:]
+        pk = plane.k[:L, idx].reshape((L, n_pages * page) + tail)[:, :M]
+        pv = plane.v[:L, idx].reshape((L, n_pages * page) + tail)[:, :M]
+        toks = jnp.asarray(req.tokens[M:], jnp.int32)[None, :]
+        logits, k_sfx, v_sfx = self.model.prefill_suffix(
+            self.params, toks, pk, pv)
+        self.binding.write_prompt_at(req.req_id, k_sfx[:, 0], v_sfx[:, 0], M)
+        self.positions[slot] = len(req.tokens)
+        req.out.append(int(jnp.argmax(logits[0])))
+        req.prefill_avoided = M
+        self._pc.tokens_avoided += M
+
+    def _index_prompt(self, req: Request, digs=None) -> None:
+        """Publish every full prompt page into the prefix index (pinning its
+        row) so successor stages sharing this prefix can alias it."""
+        from repro.serving.prefix_cache import page_digests, root_key
+        name = self._pc_ns
+        page = self.page_tokens
+        if digs is None:
+            digs = page_digests(req.tokens, page, name)
+        rows = self.binding.seq_rows(req.req_id)
+        parent = root_key(name)
+        for i, d in enumerate(digs):
+            self._pc.insert(name, d, parent, self.binding.plane, rows[i],
+                            req.tokens[i * page:(i + 1) * page],
+                            n_prefix_tokens=(i + 1) * page)
+            parent = d
 
     # --------------------------------------------------------------- decode
     def step(self) -> List[Request]:
@@ -273,6 +380,10 @@ class Engine:
         for rid in self.active:
             slot = self.slot_of[rid]
             pos = int(self.positions[slot])
+            if self._pc is not None and self.binding.make_private(
+                    rid, pos // self.page_tokens):
+                # defensive: a decode write must never land on a shared row
+                self._pc.cow_copies += 1
             table = self.binding.row_table(rid)
             bt[slot] = table
             seq_lens[slot] = pos + 1
@@ -316,6 +427,7 @@ class Engine:
             return self.cancel(req_id)
         slot = self.slot_of.pop(req_id)
         self._needs.pop(req_id, None)
+        self._hits.pop(req_id, None)
         self.binding.free_seq(req_id)
         self.free_slots.append(slot)
         self.positions[slot] = 0

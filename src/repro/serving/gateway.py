@@ -62,6 +62,7 @@ from repro.serving.clock import (RunDeadlineExceeded, VirtualClock,
 from repro.serving.cluster import LiveJob, LiveStage
 from repro.serving.engine import PromptTooLongError, Request
 from repro.serving.node_runtime import NodeRuntime
+from repro.serving.prefix_cache import page_digests
 from repro.serving.telemetry import GatewayMetrics, Telemetry
 from repro.serving.worker import close_fleet
 
@@ -221,6 +222,11 @@ class ClusterGateway:
         self._truncated = 0
         self._rejects: Dict[int, int] = collections.defaultdict(int)
         self._views: Dict[int, SchedStage] = {}
+        # prefix-affinity routing inputs: chained page digests of each
+        # stage's prompt, computed lazily per stage and memoized (the page
+        # geometry is fleet-uniform — every node shares one arena layout)
+        self._page_tokens = next(iter(self.fleet.values())).page_tokens
+        self._stage_digests: Dict[int, Tuple[str, ...]] = {}
 
         # the global queue: (priority, seq, stage_id) heap + live-id set;
         # priorities come from policy.priority and are refreshed on the
@@ -366,6 +372,17 @@ class ClusterGateway:
     def ready_since(self, stage_id: int) -> float:
         return self.ready_t.get(stage_id, float("inf"))
 
+    def prefix_digests(self, stage: SchedStage) -> Sequence[str]:
+        """Chained prefix-page digests of the stage's live prompt, for
+        prefix-affinity routing (the same chain the node engines index)."""
+        d = self._stage_digests.get(stage.stage_id)
+        if d is None:
+            ls = self.stage_by_id[stage.stage_id]
+            d = tuple(page_digests(ls.tokens, self._page_tokens,
+                                   stage.model))
+            self._stage_digests[stage.stage_id] = d
+        return d
+
     def job_remaining_v(self, stage: LiveStage) -> float:
         """Remaining nominal execution time of the stage's job, AFTER this
         stage — the Eq. 8 sample recorded into the WorkflowProfileStore."""
@@ -495,6 +512,15 @@ class ClusterGateway:
         m.arena_peak_pages = sum(s["arena_peak_pages"] for s in stats)
         m.arena_utilization = max(
             (s["arena_utilization"] for s in stats), default=0.0)
+        # prefix-cache plane: fleet-summed index counters (plus the arena's
+        # alias/COW totals) — empty keys stay absent when no node enabled it
+        pkeys = sorted({k for s in stats for k in s
+                        if k.startswith("prefix_")})
+        if pkeys:
+            m.prefix_stats = {k: float(sum(s.get(k, 0) for s in stats))
+                              for k in pkeys}
+            for k in ("pages_aliased", "cow_copies"):
+                m.prefix_stats[k] = float(sum(s.get(k, 0) for s in stats))
         m.truncated_stages = self._truncated
         m.node_backend = self.node_backend
         m.clock = self.clock.name
@@ -813,6 +839,8 @@ class ClusterGateway:
         # telemetry's finished sentinel is finish_t > 0; dispatch-time
         # truncation can legitimately land at exactly t=0, so clamp
         ev.finish_t, ev.out_len = max(now, 1e-9), len(req.out)
+        ev.prompt_tokens = len(req.tokens)
+        ev.prefill_avoided = int(getattr(req, "prefill_avoided", 0))
         # Calibrate on the SAME basis the prediction used (the uncapped
         # trace-scale lengths): the realized output, mapped back through the
         # live decode budget, against L_hat. Comparing live capped bytes to

@@ -29,7 +29,8 @@ geometrically so jitted decode signatures stay stable between doublings).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from collections import Counter
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -64,6 +65,7 @@ class ArenaPlane:
         self.k = jnp.zeros(self._shape(n), spec.dtype)
         self.v = jnp.zeros(self._shape(n), spec.dtype)
         self.free_rows: List[int] = list(range(n - 1, 0, -1))
+        self.refs: Dict[int, int] = {}     # live row -> reference count
 
     def _shape(self, n_rows: int):
         s = self.spec
@@ -76,11 +78,32 @@ class ArenaPlane:
     def take_row(self) -> int:
         if not self.free_rows:
             self._grow()
-        return self.free_rows.pop()
+        row = self.free_rows.pop()
+        self.refs[row] = 1
+        return row
 
-    def give_row(self, row: int) -> None:
+    def share_row(self, row: int) -> None:
+        """Add a reference to a live row (prefix alias or index pin)."""
+        assert row != NULL_ROW and row in self.refs
+        self.refs[row] += 1
+
+    def drop_row(self, row: int) -> None:
+        """Release one reference; the row returns to the free list at zero."""
         assert row != NULL_ROW
-        self.free_rows.append(row)
+        self.refs[row] -= 1
+        if self.refs[row] == 0:
+            del self.refs[row]
+            self.free_rows.append(row)
+
+    # old single-owner name kept: with refcounts, give == drop one reference
+    give_row = drop_row
+
+    def copy_row(self, src: int) -> int:
+        """Copy-on-write: materialise a private copy of a shared row."""
+        dst = self.take_row()
+        self.k = self.k.at[:, dst].set(self.k[:, src])
+        self.v = self.v.at[:, dst].set(self.v[:, src])
+        return dst
 
     def _grow(self) -> None:
         """Double capacity (geometric: keeps decode retraces logarithmic)."""
@@ -113,6 +136,28 @@ class ArenaPlane:
         self.v = self.v.at[:n_layers, idx].set(
             v.reshape(shape).astype(self.v.dtype))
 
+    def write_prompt_at(self, n_layers: int, rows: np.ndarray,
+                        k: jnp.ndarray, v: jnp.ndarray,
+                        start_off: int) -> None:
+        """Scatter suffix KV starting mid-page.
+
+        ``rows`` covers the pages from the one containing the first suffix
+        token; ``start_off`` is that token's offset within it. The partial
+        first page is written in place (its row must already be private),
+        full pages after it go through :meth:`write_prompt`.
+        """
+        page = self.spec.page_tokens
+        if start_off:
+            m = min(page - start_off, k.shape[1])
+            r = int(rows[0])
+            self.k = self.k.at[:n_layers, r, start_off:start_off + m].set(
+                k[:, :m].astype(self.k.dtype))
+            self.v = self.v.at[:n_layers, r, start_off:start_off + m].set(
+                v[:, :m].astype(self.v.dtype))
+            k, v, rows = k[:, m:], v[:, m:], rows[1:]
+        if k.shape[1]:
+            self.write_prompt(n_layers, rows, k, v)
+
 
 class ModelKVBinding:
     """The 1:1 mirror between one engine's pool grants and arena rows.
@@ -139,10 +184,11 @@ class ModelKVBinding:
         return self.plane is not None
 
     # -------------------------------------------------------------- grants
-    def alloc_seq(self, seq_id: int, model: str, tokens: int) -> bool:
+    def alloc_seq(self, seq_id: int, model: str, tokens: int,
+                  alias_rows: Optional[List[int]] = None) -> bool:
         if not self.pool.alloc_seq(seq_id, model, tokens):
             return False
-        self._map(seq_id)
+        self._map(seq_id, alias_rows)
         return True
 
     def ensure_tokens(self, seq_id: int, total_tokens: int) -> bool:
@@ -154,12 +200,38 @@ class ModelKVBinding:
             self._map(seq_id)
         return True
 
-    def _map(self, seq_id: int) -> None:
+    def _map(self, seq_id: int,
+             alias_rows: Optional[List[int]] = None) -> None:
         if self.plane is not None:
-            for p in self.pool.seqs[seq_id].pages:
-                if p not in self.row_of:
+            for i, p in enumerate(self.pool.seqs[seq_id].pages):
+                if p in self.row_of:
+                    continue
+                if alias_rows is not None and i < len(alias_rows):
+                    # prefix-cache hit: share the existing row (no alloc)
+                    self.plane.share_row(alias_rows[i])
+                    self.row_of[p] = alias_rows[i]
+                    self.arena.pages_aliased += 1
+                else:
                     self.row_of[p] = self.plane.take_row()
         self.arena.note_usage()
+
+    def make_private(self, seq_id: int, page_idx: int) -> bool:
+        """Copy-on-write: give page ``page_idx`` of the sequence a private
+        row if its current row is shared. Returns True when a copy ran."""
+        if self.plane is None:
+            return False
+        pages = self.pool.seqs[seq_id].pages
+        if page_idx >= len(pages):
+            return False
+        p = pages[page_idx]
+        row = self.row_of[p]
+        if self.plane.refs.get(row, 0) <= 1:
+            return False
+        new = self.plane.copy_row(row)
+        self.plane.drop_row(row)
+        self.row_of[p] = new
+        self.arena.cow_copies += 1
+        return True
 
     # --------------------------------------------------------------- frees
     def free_seq(self, seq_id: int) -> None:
@@ -200,28 +272,38 @@ class ModelKVBinding:
             rows = np.asarray(self.seq_rows(seq_id), np.int32)
             self.plane.write_prompt(self.n_layers, rows, k, v)
 
+    def write_prompt_at(self, seq_id: int, k: jnp.ndarray, v: jnp.ndarray,
+                        start_tok: int) -> None:
+        """Scatter suffix KV for tokens ``start_tok..`` of the sequence."""
+        if self.plane is not None:
+            page = self.arena.page_tokens
+            rows = np.asarray(self.seq_rows(seq_id)[start_tok // page:],
+                              np.int32)
+            self.plane.write_prompt_at(self.n_layers, rows, k, v,
+                                       start_tok % page)
+
     # ----------------------------------------------------------- invariant
     def check_mirror(self) -> bool:
-        """Pool<->arena mirror invariant: every granted page has exactly one
-        live row; no row is shared, none is the null row; free rows +
-        mapped rows tile the plane."""
+        """Pool<->arena mirror invariant: every granted page maps to a live
+        non-null row, and nothing else is mapped. Rows may be shared across
+        mappings (prefix aliases) — reference counts are reconciled at the
+        arena level against binding maps plus prefix-index pins."""
         if self.plane is None:
             return not self.row_of
-        seen: set = set()
+        pages: set = set()
         for s in self.pool.seqs.values():
             for p in s.pages:
-                row = self.row_of.get(p)
-                if row is None or row == NULL_ROW or row in seen:
+                if self.row_of.get(p, NULL_ROW) == NULL_ROW:
                     return False
-                seen.add(row)
+                pages.add(p)
         # pages freed to the pool but not yet reclaimed keep their rows
         for p in self.pool.free_pages:
             row = self.row_of.get(p)
             if row is not None:
-                if row == NULL_ROW or row in seen:
+                if row == NULL_ROW:
                     return False
-                seen.add(row)
-        return len(seen) == len(self.row_of)
+                pages.add(p)
+        return set(self.row_of) == pages
 
 
 class KVArena:
@@ -235,6 +317,20 @@ class KVArena:
         self.peak_mapped_pages = 0
         self.peak_mapped_bytes = 0.0
         self.peak_rows = 0
+        self.prefix_index = None           # set by enable_prefix_cache
+        self.pages_aliased = 0             # pages granted without allocation
+        self.cow_copies = 0                # shared rows privatised on write
+
+    def enable_prefix_cache(self, accountant, cfg=None):
+        """Attach (idempotently) the node-wide prefix index to this arena."""
+        from repro.serving.prefix_cache import PrefixCacheConfig, PrefixIndex
+        if self.prefix_index is None:
+            self.prefix_index = PrefixIndex(self, accountant,
+                                            cfg or PrefixCacheConfig())
+        return self.prefix_index
+
+    def prefix_digest_summary(self) -> Tuple[str, ...]:
+        return self.prefix_index.summary() if self.prefix_index else ()
 
     def register(self, name: str, pool: VirtualKVPool, s_max: int,
                  n_layers: int, n_kv_heads: int, head_dim: int,
@@ -298,15 +394,29 @@ class KVArena:
             "peak_mapped_pages": self.peak_mapped_pages,
             "peak_mapped_bytes": self.peak_mapped_bytes,
             "utilization": round(self.utilization(), 4),
+            "pages_aliased": self.pages_aliased,
+            "cow_copies": self.cow_copies,
         }
 
     def check_mirror(self) -> bool:
         if not all(b.check_mirror() for b in self.bindings.values()):
             return False
-        # plane-level: free + mapped rows exactly tile each plane (minus null)
+        # plane-level: the refcount of every live row equals its binding
+        # mappings plus prefix-index pins, and live + free rows exactly tile
+        # each plane (minus the null row).
         for spec, plane in self.planes.items():
-            mapped = sum(len(b.row_of) for b in self.bindings.values()
-                         if b.plane is plane)
-            if mapped + len(plane.free_rows) != plane.n_rows - 1:
+            expect: Counter = Counter()
+            for b in self.bindings.values():
+                if b.plane is plane:
+                    expect.update(b.row_of.values())
+            if self.prefix_index is not None:
+                expect.update(self.prefix_index.row_pins(plane))
+            if NULL_ROW in expect:
+                return False
+            if dict(plane.refs) != dict(expect):
+                return False
+            if set(plane.free_rows) & set(plane.refs):
+                return False
+            if len(plane.free_rows) + len(plane.refs) != plane.n_rows - 1:
                 return False
         return True

@@ -35,7 +35,8 @@ class NodeRuntime:
                  zoo: Dict[str, Model], host_params: Dict[str, Any],
                  hbm_budget: float = 2e9, max_slots: int = 4,
                  s_max: int = 256, ctx_bytes: int = 8 << 20,
-                 page_tokens: int = 16):
+                 page_tokens: int = 16, prefix_cache: bool = False,
+                 prefix_cache_pages: int = 256):
         self.node_id = node_id
         self.cluster_id = cluster_id
         self.zoo = zoo
@@ -46,6 +47,10 @@ class NodeRuntime:
         # ONE physical paged-KV arena per node: every colocated engine's
         # pool grants map onto it 1:1 (§III.C spatial multiplexing)
         self.arena = KVArena(page_tokens=page_tokens)
+        self.prefix_cfg = None
+        if prefix_cache:
+            from repro.serving.prefix_cache import PrefixCacheConfig
+            self.prefix_cfg = PrefixCacheConfig(max_pages=prefix_cache_pages)
         self.ctx_bytes = ctx_bytes
         self.max_slots = max_slots
         self.s_max = s_max
@@ -97,7 +102,8 @@ class NodeRuntime:
             self.engines[name] = Engine(
                 self.zoo[name], self.device_params[name], self.acc,
                 max_slots=self.max_slots, s_max=self.s_max,
-                arena=self.arena)
+                arena=self.arena, prefix_cache=self.prefix_cfg,
+                prefix_ns=name)
         else:
             self.engines[name].params = self.device_params[name]
         return time.perf_counter() - t0
@@ -194,9 +200,15 @@ class NodeRuntime:
         return None if plan is None else plan.c_deg
 
     def make_room(self, r_need: float) -> None:
-        """Degradation levels 1-2 (Algorithm 2's cheap prefix) on the live
-        node: sleep idle engines, then drop sleeping warm contexts, until
-        r_need fits. In-flight engines are never touched."""
+        """Degradation levels 0-2 (Algorithm 2's cheap prefix) on the live
+        node: trim cached-but-unreferenced prefix pages first, then sleep
+        idle engines, then drop sleeping warm contexts, until r_need fits.
+        In-flight engines are never touched."""
+        idx = self.arena.prefix_index
+        if idx is not None:
+            while idx.entries and not self.acc.can_admit(r_need):
+                if not idx.trim(8):                   # level 0
+                    break
         busy = self._busy_models()
         for m in list(self.residency.lru["gpu"]):
             if self.acc.can_admit(r_need):
@@ -244,10 +256,19 @@ class NodeRuntime:
         """Arena/overcommit snapshot consumed by gateway end-of-run metrics
         — one picklable dict so worker processes report it in a single
         round trip."""
-        return {"n_engines": len(self.engines),
-                "kv_overcommit_ratio": self.kv_overcommit_ratio(),
-                "arena_peak_pages": int(self.arena.peak_mapped_pages),
-                "arena_utilization": float(self.arena.utilization())}
+        out = {"n_engines": len(self.engines),
+               "kv_overcommit_ratio": self.kv_overcommit_ratio(),
+               "arena_peak_pages": int(self.arena.peak_mapped_pages),
+               "arena_utilization": float(self.arena.utilization()),
+               "pages_aliased": int(self.arena.pages_aliased),
+               "cow_copies": int(self.arena.cow_copies)}
+        if self.arena.prefix_index is not None:
+            out.update(self.arena.prefix_index.stats())
+        return out
+
+    @property
+    def page_tokens(self) -> int:
+        return self.arena.page_tokens
 
     def signal(self) -> NodeSignal:
         warm = {m: self.residency.activation_latency(m)
@@ -256,4 +277,5 @@ class NodeRuntime:
                    ) if self.engines else 0.0
         return NodeSignal(node_id=self.node_id, cluster_id=self.cluster_id,
                           headroom=self.acc.headroom, queue_delay_s=qd,
-                          warm_models=warm, total_hbm=self.acc.m_total)
+                          warm_models=warm, total_hbm=self.acc.m_total,
+                          prefix_digests=self.arena.prefix_digest_summary())

@@ -36,6 +36,8 @@ class StageEvent:
     t_act_s: float = 0.0          # virtual activation latency (residency est.)
     wall_act_s: float = 0.0       # measured wall-clock activation
     out_len: int = 0
+    prompt_tokens: int = 0        # live prompt length the engine prefetched
+    prefill_avoided: int = 0      # prompt tokens served from the prefix cache
     preemptions: int = 0          # times this stage was evicted + requeued
     rejections: int = 0           # routing/admission failures observed
     prior_wait_s: float = 0.0     # wait accrued by attempts aborted by
@@ -105,6 +107,24 @@ class GatewayMetrics:
     node_busy_frac: Dict[int, float] = dataclasses.field(
         default_factory=dict)
     overlap_factor: float = 0.0
+    # tail percentiles alongside the p95 column: end-to-end job latency
+    # (inf when no job finished, like p95_latency_s), per-stage queue delay
+    # and per-stage service latency (ready -> finish; 0.0 when no stage
+    # finished)
+    p99_latency_s: float = float("inf")
+    p999_latency_s: float = float("inf")
+    queue_delay_p95_s: float = 0.0
+    queue_delay_p99_s: float = 0.0
+    queue_delay_p999_s: float = 0.0
+    stage_latency_p95_s: float = 0.0
+    stage_latency_p99_s: float = 0.0
+    stage_latency_p999_s: float = 0.0
+    # cross-stage prefix-cache plane: prompt tokens the engines would have
+    # prefilled vs. tokens served from cached prefix pages, plus the summed
+    # per-node index counters (empty when the cache is disabled fleet-wide)
+    prefill_tokens_total: int = 0
+    prefill_tokens_avoided: int = 0
+    prefix_stats: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -170,12 +190,28 @@ class Telemetry:
         makespan = max((e.finish_t for e in finished), default=now)
         head_min = min((min(v) for v in self.headroom.values() if v),
                        default=float("inf"))
+
+        def pct(xs: List[float], q: float, empty: float) -> float:
+            return float(np.percentile(xs, q)) if xs else empty
+
+        qdel = [e.queue_delay_s for e in finished]
+        slat = [e.finish_t - e.ready_t for e in finished]
+        inf = float("inf")
         return GatewayMetrics(
             policy=policy,
             slo_attainment=float(np.mean(slo_ok)) if slo_ok else 0.0,
             mean_latency_s=float(np.mean(lat)) if lat else float("inf"),
-            p95_latency_s=(float(np.percentile(lat, 95))
-                           if lat else float("inf")),
+            p95_latency_s=pct(lat, 95, inf),
+            p99_latency_s=pct(lat, 99, inf),
+            p999_latency_s=pct(lat, 99.9, inf),
+            queue_delay_p95_s=pct(qdel, 95, 0.0),
+            queue_delay_p99_s=pct(qdel, 99, 0.0),
+            queue_delay_p999_s=pct(qdel, 99.9, 0.0),
+            stage_latency_p95_s=pct(slat, 95, 0.0),
+            stage_latency_p99_s=pct(slat, 99, 0.0),
+            stage_latency_p999_s=pct(slat, 99.9, 0.0),
+            prefill_tokens_total=sum(e.prompt_tokens for e in finished),
+            prefill_tokens_avoided=sum(e.prefill_avoided for e in finished),
             interactive_queue_delay_s=(float(np.mean(int_delays))
                                        if int_delays else 0.0),
             batch_queue_delay_s=(float(np.mean(batch_delays))

@@ -78,6 +78,8 @@ class WorkerSpec:
     s_max: Optional[int] = None
     ctx_bytes: Optional[int] = None
     page_tokens: Optional[int] = None
+    prefix_cache: Optional[bool] = None
+    prefix_cache_pages: Optional[int] = None
     seed: int = 1
     # extra XLA_FLAGS applied inside the child BEFORE its XLA client forms
     # (e.g. "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1"
@@ -114,7 +116,10 @@ def _worker_main(conn, spec: WorkerSpec) -> None:
                                 ("max_slots", spec.max_slots),
                                 ("s_max", spec.s_max),
                                 ("ctx_bytes", spec.ctx_bytes),
-                                ("page_tokens", spec.page_tokens))
+                                ("page_tokens", spec.page_tokens),
+                                ("prefix_cache", spec.prefix_cache),
+                                ("prefix_cache_pages",
+                                 spec.prefix_cache_pages))
               if v is not None}
         node = NodeRuntime(spec.node_id, spec.cluster_id, zoo, host, **kw)
         conn.send(("ready", {"profiles": node.profiles,
@@ -251,6 +256,9 @@ class NodeHandle:
         self.profiles: Dict[str, Any] = {}
         self.max_slots = spec.max_slots
         self.s_max = spec.s_max
+        # prompt page granularity, for gateway-side digest computation
+        # (must match NodeRuntime's page_tokens default)
+        self.page_tokens = spec.page_tokens or 16
         self._inflight = 0            # submitted minus finished/preempted
         self._progress: Dict[int, int] = {}
         self._step_pending = False

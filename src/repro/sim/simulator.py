@@ -159,6 +159,9 @@ class Simulator:
     def ready_since(self, stage_id: int) -> float:
         return self.ready_at.get(stage_id, float("inf"))
 
+    def prefix_digests(self, stage) -> tuple:
+        return ()   # trace stages carry no token-level prompts
+
     def _make_view(self, s: StageRecord) -> SchedStage:
         job = self.jobs[s.job_id]
         return SchedStage(stage_id=s.stage_id, job_id=s.job_id,

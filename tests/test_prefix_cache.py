@@ -1,0 +1,195 @@
+"""Prefix-cache plane: digest chaining, refcounted row sharing + COW,
+engine cache-hit parity (token-for-token vs cache off), and full headroom
+recovery on eviction/sleep."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.runtime.accounting import MemoryAccountant
+from repro.core.runtime.kv_pool import VirtualKVPool
+from repro.models import build_model
+from repro.serving.engine import Engine, Request
+from repro.serving.kv_arena import KVArena
+from repro.serving.prefix_cache import (PrefixCacheConfig, page_digests,
+                                        root_key)
+
+GEO = dict(n_layers=2, n_kv_heads=2, head_dim=32, dtype="float32")
+ALPHA = 2 * 2 * 2 * 32 * 4
+
+
+def _bind(arena, acc, name="m"):
+    pool = VirtualKVPool(acc, page_bytes=ALPHA * arena.page_tokens,
+                         page_tokens=arena.page_tokens)
+    return arena.register(name, pool, s_max=256, **GEO)
+
+
+# --------------------------------------------------------------- digests
+def test_page_digests_chained_and_namespaced():
+    toks = list(range(40))
+    d = page_digests(toks, 16, "model-a")
+    assert len(d) == 2                      # only full pages
+    assert d == page_digests(toks, 16, "model-a")          # deterministic
+    assert d != page_digests(toks, 16, "model-b")          # keyed by model
+    # chaining: perturbing page 0 changes every later digest too
+    toks2 = [99] + toks[1:]
+    d2 = page_digests(toks2, 16, "model-a")
+    assert d2[0] != d[0] and d2[1] != d[1]
+    # shared first page, divergent second
+    toks3 = toks[:16] + [7] * 24
+    d3 = page_digests(toks3, 16, "model-a")
+    assert d3[0] == d[0] and d3[1] != d[1]
+
+
+# ----------------------------------------------------- arena-level sharing
+def test_alias_refcounts_cow_and_flush():
+    acc = MemoryAccountant(m_total=4e6)
+    arena = KVArena(page_tokens=16)
+    b = _bind(arena, acc)
+    idx = arena.enable_prefix_cache(acc, PrefixCacheConfig(max_pages=8))
+    assert b.alloc_seq(0, "m", tokens=40)                  # 3 pages
+    rows = b.seq_rows(0)
+    toks = list(range(48))
+    digs = page_digests(toks, 16, "m")
+    parent = root_key("m")
+    for i, d in enumerate(digs[:2]):
+        assert idx.insert("m", d, parent, b.plane, rows[i],
+                          toks[16 * i:16 * (i + 1)], 16 * (i + 1))
+        parent = d
+    assert arena.check_mirror()
+    assert b.plane.refs[rows[0]] == 2                      # mapping + pin
+    # pinned prefixes survive the sequence's release
+    b.free_seq(0)
+    assert arena.mapped_pages() == 0
+    assert b.plane.refs[rows[0]] == 1 and b.plane.refs[rows[1]] == 1
+    assert arena.check_mirror()
+    assert acc.m_kv == pytest.approx(0.0)
+    assert idx.pinned_bytes() == 2 * b.plane.spec.row_bytes
+    # a new sequence aliases the cached rows instead of allocating
+    assert b.alloc_seq(1, "m", tokens=40, alias_rows=rows[:2])
+    assert b.seq_rows(1)[:2] == rows[:2]
+    assert b.plane.refs[rows[0]] == 2
+    assert arena.pages_aliased == 2
+    assert arena.check_mirror()
+    # COW privatises a shared page; the original row keeps its pin
+    assert b.make_private(1, 0)
+    assert b.seq_rows(1)[0] != rows[0]
+    assert b.plane.refs[rows[0]] == 1
+    assert arena.cow_copies == 1
+    assert not b.make_private(1, 0)                        # already private
+    assert arena.check_mirror()
+    b.free_seq(1)
+    # flush releases every pin and the accountant context
+    idx.flush()
+    assert not idx.entries and idx.pinned_bytes() == 0
+    assert arena.mapped_rows() == 0
+    assert all(not p.refs for p in arena.planes.values())
+    assert arena.check_mirror()
+    assert acc.check_invariant()
+    assert "prefix-cache" not in acc.ctx
+
+
+def test_index_eviction_under_cap():
+    acc = MemoryAccountant(m_total=4e6)
+    arena = KVArena(page_tokens=16)
+    b = _bind(arena, acc)
+    idx = arena.enable_prefix_cache(acc, PrefixCacheConfig(max_pages=2))
+    assert b.alloc_seq(0, "m", tokens=80)                  # 5 pages
+    rows = b.seq_rows(0)
+    toks = list(range(80))
+    digs = page_digests(toks, 16, "m")
+    parent = root_key("m")
+    for i, d in enumerate(digs):
+        idx.insert("m", d, parent, b.plane, rows[i],
+                   toks[16 * i:16 * (i + 1)], 16 * (i + 1))
+        parent = d
+    assert len(idx.entries) == 2 and idx.evictions == 3    # LRU capped
+    assert arena.check_mirror()
+    b.free_seq(0)
+    idx.flush()
+    assert arena.check_mirror() and acc.m_kv == pytest.approx(0.0)
+
+
+# ------------------------------------------------------------ engine level
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("qwen3-8b").reduced()
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _run_seq(m, params, prompts, prefix_cache, max_new=6, s_max=64):
+    """Submit prompts one at a time (drain between) so later prompts can hit
+    prefixes indexed by earlier ones."""
+    eng = Engine(m, params, MemoryAccountant(m_total=256e6), max_slots=2,
+                 s_max=s_max, kv_backend="ref", prefix_cache=prefix_cache)
+    out = {}
+    for i, p in enumerate(prompts):
+        eng.submit(Request(req_id=i, tokens=list(p), max_new=max_new))
+        for r in eng.drain():
+            out[r.req_id] = r
+    return eng, out
+
+
+def test_engine_hit_parity_token_for_token(tiny):
+    cfg, m, params = tiny
+    rng = np.random.default_rng(5)
+    base = list(rng.integers(0, cfg.vocab, 40))
+    prompts = [base,                         # indexes 2 full pages
+               base[:32] + [3, 1, 4, 1, 5],  # hits both full pages
+               base[:16] + [9] * 20]         # hits page 0 only
+    eng_off, off = _run_seq(m, params, prompts, prefix_cache=None)
+    eng_on, on = _run_seq(m, params, prompts, prefix_cache=True)
+    assert eng_on._pc is not None
+    assert {k: r.out for k, r in on.items()} == \
+           {k: r.out for k, r in off.items()}
+    assert on[1].prefill_avoided == 32 and on[2].prefill_avoided >= 16
+    assert off[1].prefill_avoided == 0
+    assert eng_on._pc.hits >= 2 and eng_on._pc.tokens_avoided >= 48
+    assert eng_on.arena.pages_aliased >= 3
+    assert eng_on.arena.check_mirror()
+
+
+def test_engine_partial_page_cow_parity(tiny):
+    cfg, m, params = tiny
+    rng = np.random.default_rng(8)
+    base = list(rng.integers(0, cfg.vocab, 40))
+    div = base[:22] + [int(t) + 1 for t in base[22:]]  # diverges mid-page 1
+    prompts = [base, div]
+    eng_off, off = _run_seq(m, params, prompts, prefix_cache=None)
+    eng_on, on = _run_seq(m, params, prompts, prefix_cache=True)
+    assert {k: r.out for k, r in on.items()} == \
+           {k: r.out for k, r in off.items()}
+    # page 0 aliased whole; page 1 aliased then copy-on-written at token 22
+    assert on[1].prefill_avoided == 22
+    assert eng_on._pc.partial_hits == 1
+    assert eng_on._pc.cow_copies >= 1 and eng_on.arena.cow_copies >= 1
+    assert eng_on.arena.check_mirror()
+
+
+def test_engine_sleep_recovers_all_headroom(tiny):
+    cfg, m, params = tiny
+    rng = np.random.default_rng(9)
+    base = list(rng.integers(0, cfg.vocab, 40))
+    eng, _ = _run_seq(m, params, [base, base[:32] + [1, 2, 3]],
+                      prefix_cache=True)
+    acc = eng.acc
+    assert eng._pc.entries and acc.ctx.get("prefix-cache", 0) > 0
+    eng.release_kv()
+    assert not eng._pc.entries
+    assert "prefix-cache" not in acc.ctx
+    assert eng.arena.mapped_pages() == 0 and eng.arena.mapped_rows() == 0
+    assert all(not p.refs for p in eng.arena.planes.values())
+    assert acc.m_kv == pytest.approx(0.0)
+    assert eng.arena.check_mirror() and acc.check_invariant()
+
+
+def test_disabled_cache_changes_nothing(tiny):
+    cfg, m, params = tiny
+    rng = np.random.default_rng(3)
+    prompts = [list(rng.integers(0, cfg.vocab, 24))] * 2
+    eng, out = _run_seq(m, params, prompts, prefix_cache=None)
+    assert eng._pc is None
+    assert eng.arena.prefix_index is None
+    assert eng.arena.pages_aliased == 0
+    assert all(r.prefill_avoided == 0 for r in out.values())

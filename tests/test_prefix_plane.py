@@ -1,0 +1,221 @@
+"""Cross-stage prefix-cache PLANE: team-trace generation invariants, block
+token materialization, prefix-affinity routing, tail-percentile telemetry,
+live gateway reuse end-to-end, and zero-extra-IPC digest transport."""
+import dataclasses
+import types
+
+import numpy as np
+import pytest
+
+from _stubs import StubPred
+from repro.core.sched.fitness import (FitnessRouter, FitnessWeights,
+                                      NodeSignal, StageRequest)
+from repro.data.tracegen import generate_team_trace, generate_trace
+from repro.serving.cluster import (ClusterSpec, NodeSpec, build_fleet,
+                                   build_zoo, jobs_from_trace)
+from repro.serving.gateway import ClusterGateway, GatewayConfig
+from repro.serving.telemetry import Telemetry
+
+RTT = np.array([[0.001, 0.04], [0.04, 0.001]])
+ZOO_NAMES = ("qwen3-8b",)     # single-model zoo: every model_id maps to it
+
+
+@pytest.fixture(scope="module")
+def zoo_host():
+    return build_zoo(ZOO_NAMES, seed=1)
+
+
+def _fleet(zoo_host, prefix_cache, n_nodes=2):
+    zoo, host = zoo_host
+    nodes = tuple(NodeSpec(i % 2, max_slots=2, s_max=192,
+                           prefix_cache=prefix_cache)
+                  for i in range(n_nodes))
+    return build_fleet(ClusterSpec(nodes=nodes, rtt_s=RTT,
+                                   model_names=ZOO_NAMES),
+                       zoo=zoo, host=host)
+
+
+# --------------------------------------------------------------- tracegen
+def test_team_trace_deterministic_and_dag_valid():
+    a = generate_team_trace(12, seed=5)
+    b = generate_team_trace(12, seed=5)
+    assert [dataclasses.asdict(j) for j in a] \
+        == [dataclasses.asdict(j) for j in b]
+    assert generate_team_trace(12, seed=6) != a      # seed actually matters
+    for job in a:
+        sids = [s.stage_id for s in job.stages]
+        for s in job.stages:
+            for d in s.deps:
+                assert d in sids and d < s.stage_id   # deps precede, in-job
+            assert s.prompt_blocks, "team stages must carry prompt blocks"
+
+
+def test_team_trace_child_blocks_extend_parent():
+    """Every dependent stage's block sequence starts with its first
+    parent's full sequence — the structural invariant prefix reuse needs —
+    and same-team jobs share the leading system block."""
+    jobs = generate_team_trace(9, seed=2, n_teams=3)
+    for job in jobs:
+        by_id = {s.stage_id: s for s in job.stages}
+        for s in job.stages:
+            if s.deps:
+                parent = by_id[s.deps[0]]
+                n = len(parent.prompt_blocks)
+                assert s.prompt_blocks[:n] == parent.prompt_blocks
+                assert len(s.prompt_blocks) == n + 3   # reply + role + turn
+            else:
+                assert s.prompt_blocks[0][0] == f"team{job.job_id % 3}:sys"
+        assert all(s.obs.prompt_len
+                   == 32 * sum(n for _, n in s.prompt_blocks)
+                   for s in job.stages)
+
+
+def test_classic_trace_untouched_by_block_field():
+    """generate_trace output is byte-identical across calls and carries no
+    blocks; jobs_from_trace on it never consults the block helper (legacy
+    token streams stay on the shared rng)."""
+    t1, t2 = generate_trace(6, seed=3), generate_trace(6, seed=3)
+    assert [dataclasses.asdict(j) for j in t1] \
+        == [dataclasses.asdict(j) for j in t2]
+    assert all(s.prompt_blocks is None for j in t1 for s in j.stages)
+    l1 = jobs_from_trace(t1, seed=9)
+    l2 = jobs_from_trace(t2, seed=9)
+    assert [s.tokens for j in l1 for s in j.stages] \
+        == [s.tokens for j in l2 for s in j.stages]
+
+
+def test_block_tokens_shared_across_stages():
+    """Stages sharing leading blocks materialize to identical leading
+    tokens — across stages of one job AND across jobs of one team."""
+    jobs = generate_team_trace(8, seed=1, n_teams=2, sys_tokens=32)
+    live = jobs_from_trace(jobs, gen_cap=4)
+    toks = {s.stage_id: s.tokens for j in live for s in j.stages}
+    blocks = {s.stage_id: s.prompt_blocks for j in jobs for s in j.stages}
+    for j in jobs:
+        for s in j.stages:
+            assert len(toks[s.stage_id]) \
+                == sum(n for _, n in s.prompt_blocks)
+            if s.deps:
+                p = s.deps[0]
+                assert toks[s.stage_id][:len(toks[p])] == toks[p]
+    # cross-job: same team => same 32 leading (system-block) tokens
+    roots = [s for j in jobs for s in j.stages if not s.deps]
+    by_team = {}
+    for s in roots:
+        by_team.setdefault(blocks[s.stage_id][0][0], []).append(
+            toks[s.stage_id][:32])
+    for variants in by_team.values():
+        assert all(v == variants[0] for v in variants)
+    assert len(by_team) == 2 and \
+        by_team["team0:sys"][0] != by_team["team1:sys"][0]
+
+
+# ------------------------------------------------------- prefix affinity
+def test_fitness_prefix_affinity_chain_walk():
+    r = FitnessRouter(RTT, weights=FitnessWeights(w_prefix=1.0))
+    sig = NodeSignal(node_id=0, cluster_id=0, headroom=1e9,
+                     queue_delay_s=0.0, warm_models={},
+                     prefix_digests=("a", "b", "z"))
+    req = StageRequest(stage_id=0, model="m", r_need=1.0, interactive=True,
+                       src_cluster=0, t_exec=1.0,
+                       prefix_digests=("a", "b", "c", "d"))
+    assert r.prefix_affinity(sig, req) == pytest.approx(0.5)  # stops at c
+    req_none = dataclasses.replace(req, prefix_digests=())
+    assert r.prefix_affinity(sig, req_none) == 0.0
+    r0 = FitnessRouter(RTT)                                   # w_prefix=0
+    assert r0.prefix_affinity(sig, req) == 0.0
+
+
+# ------------------------------------------------------------- telemetry
+def test_telemetry_tail_percentiles():
+    t = Telemetry()
+    jobs = []
+    finish = {}
+    for i in range(100):
+        ev = t.event(i, i, True)
+        ev.ready_t, ev.dispatch_t = 0.0, 0.01 * i
+        ev.start_t = ev.dispatch_t
+        ev.finish_t = 0.01 * i + 1.0
+        ev.prompt_tokens, ev.prefill_avoided = 100, 40
+        jobs.append(types.SimpleNamespace(
+            job_id=i, interactive=True, arrival_s=0.0, deadline_s=10.0,
+            stages=[types.SimpleNamespace(stage_id=i)]))
+        finish[i] = ev.finish_t
+    m = t.summary("x", jobs, finish, 10.0, 2.0)
+    assert m.p95_latency_s <= m.p99_latency_s <= m.p999_latency_s
+    assert m.queue_delay_p95_s <= m.queue_delay_p99_s \
+        <= m.queue_delay_p999_s
+    assert m.stage_latency_p95_s <= m.stage_latency_p99_s \
+        <= m.stage_latency_p999_s
+    # stage latency is ready->finish = dispatch_wait + 1.0 here
+    assert m.stage_latency_p95_s == pytest.approx(
+        float(np.percentile([0.01 * i + 1.0 for i in range(100)], 95)))
+    assert m.prefill_tokens_total == 100 * 100
+    assert m.prefill_tokens_avoided == 100 * 40
+    # empty run: inf job-latency tails, zero stage tails (p95 convention)
+    e = Telemetry().summary("x", [], {}, 10.0, 0.0)
+    assert e.p99_latency_s == float("inf") \
+        and e.p999_latency_s == float("inf")
+    assert e.stage_latency_p999_s == 0.0 and e.queue_delay_p999_s == 0.0
+
+
+# ------------------------------------------------------ live gateway e2e
+def test_gateway_prefix_reuse_end_to_end(zoo_host):
+    """Team trace through maestro-prefix on a prefix-enabled fleet: a
+    substantial fraction of prefill tokens is served from cached pages,
+    the per-node index counters surface in prefix_stats, and the digests
+    ride the NodeSignal snapshot."""
+    fleet = _fleet(zoo_host, prefix_cache=True)
+    trace = generate_team_trace(4, rate=4.0, seed=0)
+    jobs = jobs_from_trace(trace, n_clusters=2, gen_cap=4)
+    gw = ClusterGateway(fleet, RTT, predictor=StubPred(),
+                        policy="maestro-prefix")
+    m = gw.run(jobs)
+    assert m.run_outcome == "completed" and m.finished_jobs == 4
+    assert m.prefill_tokens_total > 0
+    frac = m.prefill_tokens_avoided / m.prefill_tokens_total
+    assert frac >= 0.2, f"only {frac:.0%} of prefill tokens avoided"
+    assert m.prefix_stats["prefix_hits"] > 0
+    assert m.prefix_stats["prefix_tokens_avoided"] \
+        == m.prefill_tokens_avoided
+    assert any(gw.signal(nid).prefix_digests for nid in gw.node_ids())
+    # routing inputs: the gateway-side digests match the engine namespace
+    some = next(s for j in jobs for s in [j.stages[0]])
+    digs = gw.prefix_digests(gw.view(some))
+    assert digs and all(isinstance(d, str) for d in digs)
+
+
+def test_gateway_disabled_cache_reports_nothing(zoo_host):
+    fleet = _fleet(zoo_host, prefix_cache=False)
+    trace = generate_team_trace(2, rate=4.0, seed=0)
+    jobs = jobs_from_trace(trace, n_clusters=2, gen_cap=4)
+    gw = ClusterGateway(fleet, RTT, predictor=StubPred(), policy="maestro")
+    m = gw.run(jobs)
+    assert m.finished_jobs == 2
+    assert m.prefill_tokens_avoided == 0 and m.prefix_stats == {}
+
+
+# ----------------------------------------------------- zero-IPC transport
+def test_ipc_calls_unchanged_by_prefix_plane():
+    """Digest transport rides existing messages: enabling the prefix cache
+    on a worker-process fleet adds ZERO IPC round trips on a classic
+    (block-free) trace — same trace, same policy, same ipc_calls."""
+    trace = generate_trace(2, seed=4)
+    calls = {}
+    for enabled in (False, True):
+        nodes = (NodeSpec(0, max_slots=2, prefix_cache=enabled),)
+        fleet = build_fleet(ClusterSpec(nodes=nodes, rtt_s=RTT,
+                                        model_names=ZOO_NAMES),
+                            backend="process")
+        try:
+            gw = ClusterGateway(
+                fleet, RTT, policy="fcfs",
+                cfg=GatewayConfig(node_backend="process"))
+            m = gw.run(jobs_from_trace(trace, n_clusters=2, gen_cap=4))
+        finally:
+            from repro.serving.worker import close_fleet
+            close_fleet(fleet)
+        assert m.finished_jobs == 2
+        calls[enabled] = m.ipc_calls
+    assert calls[True] == calls[False], \
+        f"prefix plane changed IPC round trips: {calls}"
