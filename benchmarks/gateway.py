@@ -16,9 +16,17 @@ elapsed makespan and per-node overlap — the row that demonstrates worker
 processes genuinely overlap engine compute in measured time. Persisted as
 ``BENCH_gateway_wall.json`` (machine-dependent; never clobbers the virtual
 baselines — see docs/BENCHMARKS.md).
+
+``socket_main`` (the ``gateway_socket`` bench) exercises the framed-TCP
+transport + membership plane end-to-end: virtual-clock parity of the socket
+fleet against the pipe fleet, a wall-clock leg with transport-overhead
+columns, and a fault-injection leg that SIGKILLs a worker mid-run and
+asserts recovery. Persisted as ``BENCH_gateway_socket.json``.
 """
 from __future__ import annotations
 
+import os
+import signal
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -47,7 +55,7 @@ def main(n_jobs: int = 240, rate: float = 2.0, fast: bool = False,
     spec = _spec()
     # worker processes build their own zoos; only the in-process fleet
     # shares one host-tier parameter registry across policies
-    zoo, host = (None, None) if backend == "process" \
+    zoo, host = (None, None) if backend != "inproc" \
         else build_zoo(spec.model_names)
     trace = get_trace(n_jobs, seed=seed, rate=rate)
     n_clusters = spec.rtt_s.shape[0]
@@ -72,7 +80,7 @@ def main(n_jobs: int = 240, rate: float = 2.0, fast: bool = False,
         # physically mapped (§III.C spatial multiplexing, live)
         assert m.kv_overcommit_ratio > 1.0, \
             f"{policy}: arena not overcommitted ({m.kv_overcommit_ratio})"
-        if backend == "process":
+        if backend in ("process", "socket"):
             # workers really spawned and exercised: every node did engine
             # work in its own process (ipc_calls alone would be vacuous —
             # metrics() itself costs one kv_stats round trip per node)
@@ -80,12 +88,16 @@ def main(n_jobs: int = 240, rate: float = 2.0, fast: bool = False,
                 w["worker_step_wall_s"] > 0
                 for w in m.worker_stats.values()), \
                 f"{policy}: worker counters empty ({m.worker_stats})"
+        if backend == "socket":
+            # real bytes crossed the framed TCP transport
+            assert m.rpc_bytes_sent > 0 and m.rpc_bytes_recv > 0, \
+                f"{policy}: socket transport counters empty"
         row = m.row()
         row["wall_s"] = round(wall, 1)
         row["virtual_s"] = round(gw.now, 2)
         rows.append(row)
         ipc = (f"ipc={m.ipc_calls} ({m.ipc_wall_s:.1f}s) "
-               if backend == "process" else "")
+               if backend != "inproc" else "")
         print(f"[gateway] {policy:>13}: slo={m.slo_attainment:.2f} "
               f"int_qd={m.interactive_queue_delay_s:.2f}s "
               f"p95={m.p95_latency_s:.2f}s "
@@ -277,6 +289,147 @@ def wall_main(n_jobs: int = 64, rate: float = 16.0, seed: int = 7,
         "host_parallel_scaling_x": round(scaling, 2),
         "policies": list(names),
         "process_speedup_x": speedups,
+        "rows": rows,
+    }
+
+
+# GatewayMetrics fields that legitimately differ between node backends on
+# the virtual clock (mirrors tests/test_worker.py BACKEND_ONLY, plus the
+# bench's own wall/virtual timing columns)
+_SOCKET_BACKEND_ONLY = {
+    "node_backend", "ipc_calls", "ipc_wall_s", "worker_step_wall_s",
+    "worker_stats", "rpc_bytes_sent", "rpc_bytes_recv", "wall_s",
+    "virtual_s", "rpc_wall_s", "leg",
+}
+
+
+def _socket_spec() -> ClusterSpec:
+    # 2 nodes over 2 clusters: the smallest fleet where routing, RTT and
+    # fault evacuation are all non-trivial, cheap enough that the socket
+    # bench's five fleet boots fit the CI smoke budget
+    import numpy as np
+    return ClusterSpec(nodes=(NodeSpec(0, max_slots=2),
+                              NodeSpec(1, max_slots=2)),
+                       rtt_s=np.array([[0.001, 0.04], [0.04, 0.001]]))
+
+
+def socket_main(n_jobs: int = 24, rate: float = 2.0, seed: int = 13,
+                fault_jobs: int = 6, policy: str = "fcfs",
+                max_run_s: float = 600.0) -> Dict:
+    """Socket-transport gateway benchmark, three legs on one trace:
+
+    1. **virtual parity** — the same trace under the deterministic virtual
+       clock on the ``process`` (pipe) and ``socket`` (framed TCP) fleets;
+       asserts bit-identical completion sets and metrics (modulo transport
+       counters), the tentpole's parity contract.
+    2. **wall** — the socket fleet under the wall clock, reporting the
+       transport overhead columns (``rpc_wall_s``, bytes on the wire,
+       heartbeat misses) next to the PR 5 wall columns.
+    3. **fault** — a wall-clock run that SIGKILLs one worker mid-run and
+       asserts the membership plane recovers: stages requeue, the run
+       completes on the survivor, the death lands in telemetry.
+
+    Persisted by ``benchmarks.run`` as ``BENCH_gateway_socket.json``
+    (machine-dependent wall/fault legs; the parity leg is the
+    deterministic part)."""
+    banner(f"gateway-socket: framed-TCP fleet ({n_jobs} jobs parity, "
+           f"{fault_jobs} jobs fault, policy={policy})")
+    spec = _socket_spec()
+    n_clusters = spec.rtt_s.shape[0]
+    trace = get_trace(n_jobs, seed=seed, rate=rate)
+    rows: List[Dict] = []
+
+    def _leg(backend: str, clock: str, leg: str, jobs_trace,
+             kill_one: bool = False, gen_cap: int = 16):
+        fleet = build_fleet(spec, backend=backend)
+        jobs = jobs_from_trace(jobs_trace, n_clusters=n_clusters, seed=seed,
+                               gen_cap=gen_cap)
+        victim = fleet[0]
+        t0 = time.time()
+        try:
+            gw = ClusterGateway(
+                fleet, spec.rtt_s, policy=policy,
+                cfg=GatewayConfig(node_backend=backend, clock=clock,
+                                  heartbeat_s=0.05 if kill_one else 0.25,
+                                  max_run_s=max_run_s))
+            if clock == "wall":
+                gw.warmup()
+            if not kill_one:
+                m = gw.run(jobs)
+            else:
+                gw.submit_jobs(jobs)
+                gw.clock.restart()
+                gw.clock.set_deadline(max_run_s)
+                killed = False
+                while gw._unfinished() and not gw.clock.expired():
+                    gw.step()
+                    if not killed and any(
+                            r.submitted and r.node_id == victim.node_id
+                            for r in gw.inflight.values()):
+                        os.kill(victim.proc.pid, signal.SIGKILL)
+                        killed = True
+                assert killed, "fault leg: victim never got submitted work"
+                m = gw.metrics()
+            events = {sid: (e.node_id, e.out_len, e.finish_t, e.dispatch_t)
+                      for sid, e in gw.telemetry.events.items()
+                      if e.finish_t > 0}
+        finally:
+            close_fleet(fleet)
+        row = m.row()
+        row["leg"] = leg
+        row["wall_s"] = round(time.time() - t0, 1)
+        row["rpc_wall_s"] = m.ipc_wall_s       # transport overhead column
+        rows.append(row)
+        print(f"[gateway-socket] {leg:>15}: fin={m.finished_jobs} jobs/"
+              f"{m.finished_stages} stages outcome={m.run_outcome} "
+              f"deaths={m.node_deaths} requeued={m.requeued_stages} "
+              f"rpc={m.ipc_calls} ({m.ipc_wall_s:.2f}s, "
+              f"{m.rpc_bytes_sent + m.rpc_bytes_recv} B) "
+              f"hb_miss={m.heartbeat_misses} ({row['wall_s']:.0f}s wall)")
+        return m, events, row
+
+    # leg 1: virtual-clock parity, process (pipe) vs socket (framed TCP)
+    m_p, ev_p, row_p = _leg("process", "virtual", "virtual_process", trace)
+    m_s, ev_s, row_s = _leg("socket", "virtual", "virtual_socket", trace)
+    assert ev_p == ev_s, "socket completion set diverged from process"
+    mismatched = [k for k in row_p
+                  if k not in _SOCKET_BACKEND_ONLY and row_p[k] != row_s[k]]
+    assert not mismatched, f"socket parity broke on fields: {mismatched}"
+    assert m_s.rpc_bytes_sent > 0 and m_s.rpc_bytes_recv > 0
+    n_compared = len([k for k in row_p if k not in _SOCKET_BACKEND_ONLY])
+    print(f"[gateway-socket] parity: {len(ev_p)} completions and "
+          f"{n_compared} metric fields identical across transports")
+
+    # leg 2: wall clock over TCP — the transport-overhead row
+    m_w, _, _ = _leg("socket", "wall", "wall_socket", trace)
+    assert m_w.finished_jobs > 0 and m_w.clock == "wall"
+
+    # leg 3: wall clock + SIGKILL one worker mid-run
+    fault_trace = get_trace(fault_jobs, seed=3, rate=4.0)
+    m_f, ev_f, _ = _leg("socket", "wall", "fault_socket", fault_trace,
+                        kill_one=True, gen_cap=12)
+    total = sum(len(j.stages) for j in fault_trace)
+    assert m_f.run_outcome == "completed", \
+        f"fault leg did not complete: {m_f.run_outcome}"
+    assert m_f.node_deaths == 1 and m_f.requeued_stages >= 1
+    assert m_f.finished_stages == total and len(ev_f) == total
+
+    return {
+        "backend": "socket",
+        "clock": "virtual+wall",
+        "n_jobs": n_jobs,
+        "fault_jobs": fault_jobs,
+        "n_stages": sum(len(j.stages) for j in trace),
+        "rate_jobs_per_s": rate,
+        "nodes": len(spec.nodes),
+        "clusters": spec.n_clusters,
+        "policy": policy,
+        "zoo": list(spec.model_names),
+        "max_run_s": max_run_s,
+        "parity_fields_identical": n_compared,
+        "parity_completions": len(ev_p),
+        "fault_requeued_stages": m_f.requeued_stages,
+        "fault_heartbeat_misses": m_f.heartbeat_misses,
         "rows": rows,
     }
 

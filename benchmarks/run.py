@@ -6,9 +6,15 @@
   python -m benchmarks.run --only table5_memory fig10_activation
   python -m benchmarks.run --smoke --only gateway --backend process
                                         # live gateway on worker processes
+  python -m benchmarks.run --smoke --only gateway --backend socket
+                                        # live gateway over the framed-TCP
+                                        # socket transport (localhost)
   python -m benchmarks.run --smoke --only gateway --clock wall
                                         # wall-clock gateway (real elapsed
                                         # time, inproc vs process fleets)
+  python -m benchmarks.run --smoke --only gateway_socket
+                                        # socket parity + wall overhead +
+                                        # kill-a-worker fault injection
 """
 from __future__ import annotations
 
@@ -51,6 +57,9 @@ def _register(mode: str, backend: str = "inproc",
             policies=SMOKE_POLICIES if smoke else None, backend=backend)
     BENCHES.update({
         "gateway": gateway_bench,
+        "gateway_socket": lambda: gateway.socket_main(
+            n_jobs={"full": 48, "fast": 12, "smoke": 5}[mode],
+            fault_jobs=6),
         "prefix_reuse": lambda: prefix_reuse.main(
             n_jobs={"full": 96, "fast": 24, "smoke": 10}[mode], fast=fast,
             backend=backend, include_wall=(mode == "full")),
@@ -98,10 +107,12 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes + policy subset (CI entry-point check)")
     ap.add_argument("--only", nargs="*", default=None)
-    ap.add_argument("--backend", choices=("inproc", "process"),
+    ap.add_argument("--backend", choices=("inproc", "process", "socket"),
                     default="inproc",
                     help="gateway node backend: cooperative in-process "
-                         "runtimes (default) or one worker process per node")
+                         "runtimes (default), one worker process per node "
+                         "(pipes), or worker processes over the framed-TCP "
+                         "socket transport")
     ap.add_argument("--clock", choices=("virtual", "wall"),
                     default="virtual",
                     help="gateway clock: deterministic virtual ticks "
@@ -131,6 +142,11 @@ def main() -> None:
                         suffix = "_wall"
                     elif payload.get("node_backend", "inproc") != "inproc":
                         suffix = f"_{payload['node_backend']}"
+                        if f"{name}{suffix}" in BENCHES:
+                            # a dedicated bench owns that filename (e.g.
+                            # gateway_socket): disambiguate the generic
+                            # backend-swept rows
+                            suffix += "_backend"
                     payload["repro"] = repro_stamp(payload)
                 try:
                     save_result(f"BENCH_{name}{suffix}", payload)

@@ -9,6 +9,8 @@ end-to-end through the full Maestro hierarchy (SRTF queue -> fitness routing
   PYTHONPATH=src python examples/serve_multi_agent.py            # in-process
   PYTHONPATH=src python examples/serve_multi_agent.py process    # one worker
                                                                  # per node
+  PYTHONPATH=src python examples/serve_multi_agent.py socket     # workers over
+                                                                 # framed TCP
 """
 import time
 
@@ -41,7 +43,9 @@ def main(n_jobs: int = 6, train_jobs: int = 300, policy: str = "maestro",
     simulator and this live gateway. ``backend`` picks the node runtime
     mode — "inproc" steps every node cooperatively in this process
     (deterministic default), "process" spawns one worker process per node
-    so the fleet genuinely runs concurrently."""
+    so the fleet genuinely runs concurrently, "socket" runs the same
+    workers over the framed-TCP transport (localhost here; the remote-host
+    path is ``python -m repro.serving.worker --listen``)."""
     print(f"[serve] training the agent-aware cost predictor "
           f"({train_jobs} recorded jobs) ...")
     pred = train_predictor(train_jobs)
@@ -64,10 +68,12 @@ def main(n_jobs: int = 6, train_jobs: int = 300, policy: str = "maestro",
         m = gw.run(jobs)
         print(f"[serve] done in {time.time() - t0:.1f}s wall "
               f"({gw.tick} ticks = {gw.now:.1f}s virtual)")
-        if backend == "process":
+        if backend != "inproc":
+            wire = (f", {m.rpc_bytes_sent + m.rpc_bytes_recv} B on the wire"
+                    if backend == "socket" else "")
             print(f"[serve]   worker IPC           : {m.ipc_calls} round "
                   f"trips ({m.ipc_wall_s:.1f}s), engine step wall "
-                  f"{m.worker_step_wall_s:.1f}s")
+                  f"{m.worker_step_wall_s:.1f}s{wire}")
         print(f"[serve]   finished jobs        : {m.finished_jobs}/"
               f"{len(jobs)} (dropped {m.dropped_jobs})")
         print(f"[serve]   SLO attainment       : {m.slo_attainment:.2f}")

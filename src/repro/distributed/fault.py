@@ -44,6 +44,14 @@ class StragglerDetector:
         mu, sd = float(fleet.mean()), float(fleet.std() + 1e-9)
         return (step_s - mu) / sd > self.z
 
+    def forget(self, node: int) -> None:
+        """Drop a node's history when it leaves the fleet (death or
+        retirement) so its stale mean stops skewing the fleet distribution
+        every later node is judged against."""
+        self.mean.pop(node, None)
+        self.var.pop(node, None)
+        self.count.pop(node, None)
+
     def stragglers(self) -> List[int]:
         if len(self.mean) < 3:
             return []

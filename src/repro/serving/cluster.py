@@ -68,29 +68,13 @@ def build_zoo(model_names: Sequence[str] = DEFAULT_ZOO, seed: int = 1
     return zoo, host
 
 
-def build_fleet(spec: Optional[ClusterSpec] = None,
-                zoo: Optional[Dict[str, Any]] = None,
-                host: Optional[Dict[str, Any]] = None,
-                seed: int = 1, backend: str = "inproc",
-                worker_xla_flags: Optional[str] = None) -> List[Any]:
-    """Instantiate the fleet; node ids are positional.
-
-    ``backend="inproc"`` (default) returns in-process ``NodeRuntime``
-    objects; ``backend="process"`` spawns one worker process per node and
-    returns ``NodeHandle`` proxies (each child builds its own zoo from the
-    same ``model_names`` + ``seed``, so the fleets are numerically
-    identical — ``zoo``/``host`` are ignored there).
-    ``worker_xla_flags`` (process backend only) is appended to each child's
-    ``XLA_FLAGS`` before its XLA client forms — an operator knob for wall-
-    clock fleets (e.g. pin workers single-threaded on hosts where process
-    thread pools outnumber cores; measure first — on some hosts the pool
-    wins). Leave it None for virtual-clock runs, whose bit-identical
-    parity is stated for unmodified child numerics."""
-    spec = spec or ClusterSpec()
-    if backend == "process":
-        from repro.serving.worker import WorkerSpec, spawn_fleet
-        return spawn_fleet([
-            WorkerSpec(node_id=nid, cluster_id=ns.cluster_id,
+def worker_specs(spec: ClusterSpec, seed: int = 1,
+                 worker_xla_flags: Optional[str] = None) -> List[Any]:
+    """The picklable per-node ``WorkerSpec`` list for a cluster spec —
+    what both worker backends ship to their children, and what
+    ``connect_fleet`` sends to standalone remote workers."""
+    from repro.serving.worker import WorkerSpec
+    return [WorkerSpec(node_id=nid, cluster_id=ns.cluster_id,
                        model_names=tuple(spec.model_names),
                        hbm_budget=ns.hbm_budget, max_slots=ns.max_slots,
                        s_max=ns.s_max, seed=seed,
@@ -98,10 +82,46 @@ def build_fleet(spec: Optional[ClusterSpec] = None,
                        prefix_cache_pages=(ns.prefix_cache_pages
                                            if ns.prefix_cache else None),
                        xla_flags=worker_xla_flags)
-            for nid, ns in enumerate(spec.nodes)])
+            for nid, ns in enumerate(spec.nodes)]
+
+
+def build_fleet(spec: Optional[ClusterSpec] = None,
+                zoo: Optional[Dict[str, Any]] = None,
+                host: Optional[Dict[str, Any]] = None,
+                seed: int = 1, backend: str = "inproc",
+                worker_xla_flags: Optional[str] = None,
+                worker_addresses: Optional[Sequence[Any]] = None
+                ) -> List[Any]:
+    """Instantiate the fleet; node ids are positional.
+
+    ``backend="inproc"`` (default) returns in-process ``NodeRuntime``
+    objects; ``backend="process"`` spawns one worker process per node and
+    returns ``NodeHandle`` proxies (each child builds its own zoo from the
+    same ``model_names`` + ``seed``, so the fleets are numerically
+    identical — ``zoo``/``host`` are ignored there); ``backend="socket"``
+    speaks the same protocol over the framed TCP transport — localhost
+    children by default, or, when ``worker_addresses`` gives one
+    "host:port" per node, workers already listening elsewhere (started
+    with ``python -m repro.serving.worker --listen``).
+    ``worker_xla_flags`` (worker backends only) is appended to each child's
+    ``XLA_FLAGS`` before its XLA client forms — an operator knob for wall-
+    clock fleets (e.g. pin workers single-threaded on hosts where process
+    thread pools outnumber cores; measure first — on some hosts the pool
+    wins). Leave it None for virtual-clock runs, whose bit-identical
+    parity is stated for unmodified child numerics."""
+    spec = spec or ClusterSpec()
+    if worker_addresses is not None and backend != "socket":
+        raise ValueError("worker_addresses requires backend='socket'")
+    if backend in ("process", "socket"):
+        from repro.serving.worker import connect_fleet, spawn_fleet
+        specs = worker_specs(spec, seed=seed,
+                             worker_xla_flags=worker_xla_flags)
+        if worker_addresses is not None:
+            return connect_fleet(worker_addresses, specs)
+        return spawn_fleet(specs, backend=backend)
     if backend != "inproc":
         raise ValueError(f"unknown node backend {backend!r} "
-                         "(expected 'inproc' or 'process')")
+                         "(expected 'inproc', 'process' or 'socket')")
     if zoo is None or host is None:
         zoo, host = build_zoo(spec.model_names, seed=seed)
     fleet = []

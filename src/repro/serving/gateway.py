@@ -57,14 +57,17 @@ from repro.core.sched.fitness import NodeSignal
 from repro.core.sched.policies import SchedPolicy, make_policy
 from repro.core.sched.substrate import SchedStage
 from repro.core.topology import validate_rtt
+from repro.distributed.fault import StragglerDetector
 from repro.serving.clock import (RunDeadlineExceeded, VirtualClock,
                                  make_clock)
 from repro.serving.cluster import LiveJob, LiveStage
 from repro.serving.engine import PromptTooLongError, Request
 from repro.serving.node_runtime import NodeRuntime
 from repro.serving.prefix_cache import page_digests
-from repro.serving.telemetry import GatewayMetrics, Telemetry
-from repro.serving.worker import close_fleet
+from repro.serving.registry import FleetRegistry, HeartbeatConfig
+from repro.serving.telemetry import (GatewayMetrics, NodeDeathEvent,
+                                     Telemetry)
+from repro.serving.worker import WorkerDied, close_fleet
 
 COLD_START_THRESHOLD_S = 0.01
 
@@ -106,7 +109,21 @@ class GatewayConfig:
     # clock depend on it). "process": nodes are worker.NodeHandle proxies,
     # one OS process per node; under the virtual clock one tick broadcasts
     # step to every worker, under the wall clock workers free-run.
+    # "socket": the same worker protocol over the framed TCP transport
+    # (repro.serving.transport) — localhost children by default, or remote
+    # hosts via `python -m repro.serving.worker --listen`; protocol-
+    # identical to "process", so virtual-clock runs stay bit-identical.
     node_backend: str = "inproc"
+    # ---- membership plane (transport backends, wall clock only) ---------
+    # Heartbeat sweep cadence plus the liveness timeouts that demote a
+    # silent worker healthy -> suspect -> dead (gateway-clock seconds).
+    # Liveness is wall-clock-only: virtual time advances while workers
+    # compute in real time, so a virtual-denominated deadline would kill
+    # healthy nodes and break the bit-identical parity contract; under the
+    # virtual clock the only death signal is transport EOF.
+    heartbeat_s: float = 0.25
+    suspect_after_s: float = 1.0
+    dead_after_s: float = 5.0
 
     def resolved_seconds(self) -> Tuple[float, float, float]:
         """(preempt_gain_s, preempt_cooldown_s, refresh_every_s) with the
@@ -150,24 +167,29 @@ class ClusterGateway:
                  cfg: Optional[GatewayConfig] = None,
                  telemetry: Optional[Telemetry] = None):
         self.cfg = cfg or GatewayConfig()
-        if self.cfg.node_backend not in ("inproc", "process"):
+        if self.cfg.node_backend not in ("inproc", "process", "socket"):
             raise ValueError(f"unknown node_backend "
                              f"{self.cfg.node_backend!r}")
         # clock plane: the event machinery (delayed RTT/T_act releases,
         # periodic cadences, run deadline) lives in the Clock — built
         # first so an invalid mode fails before any fleet state is touched
         self.clock = make_clock(self.cfg.clock, self.cfg.tick_s)
-        # a fleet of worker handles implies the process backend even when
-        # the config was left at its default; the reverse mismatch is a
-        # hard error (an in-process runtime cannot be stepped remotely)
-        is_proc_fleet = bool(fleet) and all(hasattr(n, "step_send")
-                                            for n in fleet)
-        if self.cfg.node_backend == "process" and not is_proc_fleet:
+        # a fleet of worker handles implies a worker backend even when the
+        # config was left at its default (the handle knows whether it is
+        # process- or socket-connected); the reverse mismatch is a hard
+        # error (an in-process runtime cannot be stepped remotely)
+        is_worker_fleet = bool(fleet) and all(hasattr(n, "step_send")
+                                              for n in fleet)
+        if self.cfg.node_backend in ("process", "socket") \
+                and not is_worker_fleet:
             raise ValueError(
-                "node_backend='process' requires worker NodeHandles — "
-                "build the fleet with build_fleet(spec, backend='process')")
-        self.node_backend = "process" if is_proc_fleet \
-            else self.cfg.node_backend
+                f"node_backend={self.cfg.node_backend!r} requires worker "
+                f"NodeHandles — build the fleet with build_fleet(spec, "
+                f"backend={self.cfg.node_backend!r}); 'process' and "
+                f"'socket' fleets cannot be in-process runtimes")
+        self.node_backend = (
+            getattr(next(iter(fleet)), "backend", "process")
+            if is_worker_fleet else self.cfg.node_backend)
         self.fleet: Dict[int, NodeRuntime] = {n.node_id: n for n in fleet}
         self.rtt_s = validate_rtt(rtt_s)
         self.profiles = {name: p
@@ -187,11 +209,40 @@ class ClusterGateway:
         # backend; worker processes report their own step wall)
         self._node_busy_s: Dict[int, float] = {nid: 0.0 for nid in self.fleet}
         self._run_wall0: Optional[float] = None
-        if self.clock.name == "wall" and self.node_backend == "process":
+        if self.clock.name == "wall" and self.node_backend != "inproc":
             # workers free-run: continuous stepping inside each child, the
             # gateway polls for finished requests instead of lock-stepping
             for node in self.fleet.values():
                 node.set_continuous(True)
+
+        # membership plane: the registry tracks liveness for every backend
+        # (so register/retire/death events are uniformly visible), but the
+        # timeout sweep + idle pings run ONLY under wall clock + worker
+        # backends — heartbeats in virtual seconds would be meaningless and
+        # extra pings would break the bit-identical parity contract. Under
+        # the virtual clock death is detected by transport EOF alone.
+        self.registry = FleetRegistry(
+            HeartbeatConfig(interval_s=self.cfg.heartbeat_s,
+                            suspect_after_s=self.cfg.suspect_after_s,
+                            dead_after_s=self.cfg.dead_after_s),
+            detector=StragglerDetector())
+        for nid in self.fleet:
+            self.registry.register(nid, self.clock.now())
+        self._liveness_on = (self.clock.name == "wall"
+                             and self.node_backend != "inproc")
+        self._hb_cad = (self.clock.cadence(self.cfg.heartbeat_s)
+                        if self._liveness_on else None)
+        # piggybacked-heartbeat bookkeeping: a node whose reply counter
+        # advanced since the last sweep was provably alive (every consumed
+        # reply is a beat) — only silent nodes get an explicit ping
+        self._last_traffic: Dict[int, int] = {
+            nid: getattr(n, "ipc_calls", 0)
+            for nid, n in self.fleet.items()}
+        self._last_busy: Dict[int, float] = {nid: 0.0 for nid in self.fleet}
+        self._requeued_stages = 0
+        # dead/retired handles kept for end-of-run counter harvesting +
+        # close(); their node ids have already left self.fleet
+        self._gone_handles: List = []
 
         # workload state
         self.stage_by_id: Dict[int, LiveStage] = {}
@@ -287,7 +338,7 @@ class ClusterGateway:
         child's next engine-step boundary, stalling the dispatch loop.
         None outside that mode (or before the first poll), meaning: ask
         the node synchronously."""
-        if self.clock.name == "wall" and self.node_backend == "process":
+        if self.clock.name == "wall" and self.node_backend != "inproc":
             return self.fleet[nid].last_signal()
         return None
 
@@ -527,7 +578,12 @@ class ClusterGateway:
         if self._deadline_hit is not None:
             m.run_outcome = "deadline_exceeded"
             m.run_deadline = self._deadline_hit
-        if self.node_backend == "process":
+        if self.node_backend != "inproc":
+            # dead/retired handles first so a replacement that re-used a
+            # node id overwrites them with the live handle's counters
+            for node in self._gone_handles:
+                self.telemetry.record_worker(node.node_id,
+                                             node.worker_stats())
             for nid, node in self.fleet.items():
                 self.telemetry.record_worker(nid, node.worker_stats())
             m.worker_stats = dict(self.telemetry.worker_stats)
@@ -537,7 +593,24 @@ class ClusterGateway:
                                for w in m.worker_stats.values())
             m.worker_step_wall_s = sum(w["worker_step_wall_s"]
                                        for w in m.worker_stats.values())
+            m.heartbeat_misses = sum(
+                int(w.get("heartbeat_misses", 0))
+                for w in m.worker_stats.values())
+            # socket transport overhead (zero on the pipe backends)
+            m.rpc_bytes_sent = sum(int(w.get("bytes_sent", 0))
+                                   for w in m.worker_stats.values())
+            m.rpc_bytes_recv = sum(int(w.get("bytes_recv", 0))
+                                   for w in m.worker_stats.values())
+        # membership plane: deaths/evacuations and end-of-run liveness.
+        # Identical across backends under the virtual clock (no deaths, all
+        # healthy) so the parity contract holds; straggler flags are wall-
+        # only because the observations are real seconds.
+        m.node_deaths = len(self.telemetry.node_deaths)
+        m.death_events = list(self.telemetry.node_deaths)
+        m.requeued_stages = self._requeued_stages
+        m.liveness = self.registry.states()
         if self.clock.name == "wall":
+            m.straggler_nodes = self.registry.stragglers()
             # wall-only telemetry (left zero/empty on the virtual clock so
             # virtual metrics stay bit-identical across backends):
             # makespan in real seconds, per-node busy fractions and the
@@ -554,8 +627,9 @@ class ClusterGateway:
         return m
 
     def close(self) -> None:
-        """Shut worker processes down (no-op for the in-process backend)."""
-        close_fleet(self.fleet.values())
+        """Shut worker processes down (no-op for the in-process backend),
+        including handles already dead or retired mid-run."""
+        close_fleet(list(self.fleet.values()) + self._gone_handles)
 
     def warmup(self) -> None:
         """Pre-activate every model on every node by running one tiny
@@ -571,7 +645,7 @@ class ClusterGateway:
                 node.submit(model, Request(req_id=-(nid * 64 + k + 1),
                                            tokens=[1, 2, 3], max_new=2))
         free_running = (self.clock.name == "wall"
-                        and self.node_backend == "process")
+                        and self.node_backend != "inproc")
         for _ in range(512):                    # bounded drain
             if not any(n.has_work() for n in self.fleet.values()):
                 break
@@ -580,7 +654,7 @@ class ClusterGateway:
                 for n in self.fleet.values():
                     n.poll_finished()
                 time.sleep(0.005)
-            elif self.node_backend == "process":
+            elif self.node_backend != "inproc":
                 for n in self.fleet.values():
                     n.step_send()
                 for n in self.fleet.values():
@@ -597,26 +671,38 @@ class ClusterGateway:
             for s in self.jobs[jid].stages:
                 if not s.deps:
                     self._mark_ready(s, now)
-        # 2) aging refresh of the global queue (clock-owned cadence)
+        # 2) membership sweep (wall clock + worker backends only): fold
+        # piggybacked heartbeats, ping silent nodes, age the liveness state
+        # machine, evacuate timeouts
+        if self._liveness_on and self._hb_cad.due():
+            self._membership_sweep(now)
+        # 3) aging refresh of the global queue (clock-owned cadence)
         if self._refresh_cad.due():
             self._q_refresh(now)
-        # 3) global-queue dispatch (routing + admission + preemption)
-        self._dispatch(now)
-        # 4) transit releases: stages whose rtt + activation delay elapsed
+        # 4) global-queue dispatch (routing + admission + preemption); a
+        # worker dying mid-decision surfaces typed and is evacuated here
+        try:
+            self._dispatch(now)
+        except WorkerDied as e:
+            self._on_node_death(e.node_id, now, cause=str(e))
+        # 5) transit releases: stages whose rtt + activation delay elapsed
         # (scheduled as clock events at dispatch) hit their engines
         self._fire_releases(now)
-        # 5) engine progress: lock-step under the virtual clock, polling of
+        # 6) engine progress: lock-step under the virtual clock, polling of
         # free-running workers / direct stepping under the wall clock
         did_work = self._collect_finished(now)
-        # 6) telemetry sampling (reported signals when workers free-run —
+        # 7) telemetry sampling (reported signals when workers free-run —
         # an accountant round trip would block on an engine-step boundary)
         if self._headroom_cad.due():
-            for nid, node in self.fleet.items():
-                sig = self._reported_signal(nid)
-                self.telemetry.sample_headroom(
-                    nid, sig.headroom if sig is not None
-                    else node.acc.headroom)
-        # 7) advance time: one tick (virtual) or sleep until the next
+            for nid, node in list(self.fleet.items()):
+                try:
+                    sig = self._reported_signal(nid)
+                    self.telemetry.sample_headroom(
+                        nid, sig.headroom if sig is not None
+                        else node.acc.headroom)
+                except WorkerDied as e:
+                    self._on_node_death(e.node_id, now, cause=str(e))
+        # 8) advance time: one tick (virtual) or sleep until the next
         # wake-up (wall; skipped when engines did real work this pass)
         self.clock.advance(None if did_work else self._next_wake(now))
 
@@ -630,33 +716,47 @@ class ClusterGateway:
             # order — same per-node event order as the cooperative
             # in-process loop, so the virtual-clock outcome is identical
             # (tests/test_worker.py parity)
-            if self.node_backend == "process":
-                for node in self.fleet.values():
-                    node.step_send()
-            for nid, node in self.fleet.items():
-                out = (node.step_recv() if self.node_backend == "process"
-                       else node.step())
+            if self.node_backend != "inproc":
+                for node in list(self.fleet.values()):
+                    try:
+                        node.step_send()
+                    except WorkerDied as e:
+                        self._on_node_death(e.node_id, now, cause=str(e))
+            for nid, node in list(self.fleet.items()):
+                if nid not in self.fleet:      # died earlier this pass
+                    continue
+                try:
+                    out = (node.step_recv()
+                           if self.node_backend != "inproc"
+                           else node.step())
+                except WorkerDied as e:
+                    self._on_node_death(e.node_id, now, cause=str(e))
+                    continue
                 self._drain(out, now)
             return True
-        if self.node_backend == "process":
+        if self.node_backend != "inproc":
             # workers free-run with one poll outstanding per busy node; the
             # gateway folds in whatever replies are already in the pipe
             # (a child answers at its next engine-step boundary), then
             # re-arms — the dispatch loop NEVER blocks on worker compute,
             # so finished stages turn into new dispatches within ~wall_poll_s
-            for nid, node in self.fleet.items():
-                out = node.drain_ready()
-                if out:
-                    self._drain(out, self.clock.now())
-                for rid in node.take_submit_errors():
-                    # async submit rejected (typed prompt-too-long): the
-                    # stage finishes truncated, same as the sync path
-                    rec = self.inflight.get(rid)
-                    if rec is not None:
-                        rec.req.truncated = True
-                        self._truncated += 1
-                        self._on_finish(rec.req, self.clock.now())
-                node.poll_send()
+            for nid, node in list(self.fleet.items()):
+                try:
+                    out = node.drain_ready()
+                    if out:
+                        self._drain(out, self.clock.now())
+                    for rid in node.take_submit_errors():
+                        # async submit rejected (typed prompt-too-long): the
+                        # stage finishes truncated, same as the sync path
+                        rec = self.inflight.get(rid)
+                        if rec is not None:
+                            rec.req.truncated = True
+                            self._truncated += 1
+                            self._on_finish(rec.req, self.clock.now())
+                    node.poll_send()
+                except WorkerDied as e:
+                    self._on_node_death(e.node_id, self.clock.now(),
+                                        cause=str(e))
             return False      # polling is not compute: let advance() pace
         # wall + in-process: the gateway itself steps busy engines, one
         # node after another — real elapsed time, but serialized in this
@@ -744,7 +844,14 @@ class ClusterGateway:
                     continue
                 break                          # head-of-line block
             self._q_pop(now)
-            self._dispatch_to(stage, nid, r_need, now)
+            try:
+                self._dispatch_to(stage, nid, r_need, now)
+            except WorkerDied as e:
+                # the chosen node died between routing and dispatch: the
+                # stage is already popped, so put it straight back in the
+                # queue (still not-yet-dispatched) and evacuate the node
+                self._q_push(stage, now)
+                self._on_node_death(e.node_id, now, cause=str(e))
 
     def _dispatch_to(self, stage: LiveStage, nid: int, r_need: float,
                      now: float) -> None:
@@ -788,6 +895,14 @@ class ClusterGateway:
             self._submit_inflight(rec, now)
 
     def _submit_inflight(self, rec: _InFlight, now: float) -> None:
+        try:
+            self._submit_inflight_inner(rec, now)
+        except WorkerDied as e:
+            # node died under the submit: evacuation requeues this record
+            # (and every sibling in flight there) as not-yet-dispatched
+            self._on_node_death(e.node_id, now, cause=str(e))
+
+    def _submit_inflight_inner(self, rec: _InFlight, now: float) -> None:
         node = self.fleet[rec.node_id]
         sig = self._reported_signal(rec.node_id)
         if sig is not None and sig.headroom >= rec.r_need:
@@ -799,7 +914,7 @@ class ClusterGateway:
         t0 = time.perf_counter()
         rec.submitted = True
         self.pending_resv[rec.node_id] -= rec.r_need
-        if self.clock.name == "wall" and self.node_backend == "process":
+        if self.clock.name == "wall" and self.node_backend != "inproc":
             # free-running fleet: fire-and-forget — the ack (or typed
             # prompt-too-long, surfaced via take_submit_errors on the next
             # drain) would otherwise block the dispatch loop until the
@@ -868,13 +983,145 @@ class ClusterGateway:
                 if self.pending_deps[st.stage_id] == 0:
                     self._mark_ready(st, now)
 
+    # ---------------------------------------------------- membership plane
+    def _membership_sweep(self, now: float) -> None:
+        """One heartbeat pass (wall clock + worker backends only): reap
+        visibly dead processes, fold piggybacked heartbeats (any reply
+        consumed since the last sweep proves the worker alive), ping nodes
+        that were silent, feed step-wall deltas to the straggler detector,
+        and age the liveness state machine."""
+        for nid, node in list(self.fleet.items()):
+            proc = getattr(node, "proc", None)
+            if proc is not None and not proc.is_alive():
+                self._on_node_death(
+                    nid, now,
+                    cause=f"process exited (exitcode={proc.exitcode})")
+                continue
+            calls = getattr(node, "ipc_calls", 0)
+            if calls > self._last_traffic.get(nid, 0):
+                self.registry.beat(nid, now)   # replies ARE heartbeats
+            elif hasattr(node, "ping_send"):
+                try:
+                    node.ping_send()           # idle-period probe
+                except WorkerDied as e:
+                    self._on_node_death(e.node_id, now, cause=str(e))
+                    continue
+            self._last_traffic[nid] = calls
+            busy = (node.worker_stats()["worker_step_wall_s"]
+                    if hasattr(node, "worker_stats")
+                    else self._node_busy_s.get(nid, 0.0))
+            delta = busy - self._last_busy.get(nid, 0.0)
+            if delta > 0:
+                self.registry.observe_step(nid, delta)
+            self._last_busy[nid] = busy
+        for nid in self.registry.update(now):
+            if nid in self.fleet:
+                self._on_node_death(nid, now, cause="heartbeat timeout")
+
+    def _evacuate_node(self, nid: int, now: float) -> List[int]:
+        """Pull every in-flight stage off node ``nid`` and put it back in
+        the ready queue as not-yet-dispatched: the aborted attempt's wait
+        is banked (like preemption), per-node reservations/prefix affinity
+        are written off with the node, and pending transit releases go
+        stale (they are dropped by the `is rec` check in _fire_releases).
+        Returns the evacuated stage ids."""
+        requeued: List[int] = []
+        for sid, rec in list(self.inflight.items()):
+            if rec.node_id != nid:
+                continue
+            del self.inflight[sid]
+            ev = self.telemetry.event(sid, rec.stage.job_id,
+                                      rec.stage.interactive)
+            ev.worker_deaths += 1
+            ev.prior_wait_s += (max(0.0, ev.dispatch_t - ev.ready_t)
+                                + ev.rtt_s + ev.t_act_s)
+            ev.rtt_s = ev.t_act_s = 0.0
+            requeued.append(sid)
+            self._mark_ready(rec.stage, now)
+        self._requeued_stages += len(requeued)
+        for d in (self.node_load, self.inflight_cap, self.qd_ewma,
+                  self.pending_resv, self._node_busy_s,
+                  self._last_traffic, self._last_busy):
+            d.pop(nid, None)
+        return requeued
+
+    def _on_node_death(self, nid: int, now: float,
+                       cause: str = "transport failure") -> None:
+        """A worker died (transport EOF, dead process, heartbeat timeout):
+        remove it from the serving fleet, evacuate its in-flight stages
+        back to the ready queue, and surface a typed NodeDeathEvent. The
+        survivors keep serving; losing the LAST node is fatal (nothing
+        could ever finish and the loop would spin forever)."""
+        node = self.fleet.pop(nid, None)
+        if node is None:
+            return                         # already evacuated this pass
+        self._gone_handles.append(node)
+        self.registry.mark_dead(nid, now, cause=cause)
+        requeued = self._evacuate_node(nid, now)
+        self.telemetry.node_death(NodeDeathEvent(
+            node_id=nid, t=now, cause=cause,
+            requeued_stages=tuple(requeued)))
+        close_fleet([node])                # reap the corpse, best-effort
+        if not self.fleet:
+            raise RuntimeError(
+                f"node {nid} died ({cause}) and no nodes remain in the "
+                f"fleet — cannot make progress")
+        self._max_prompt = max(n.s_max for n in self.fleet.values()) - 1
+
+    def register_node(self, node) -> int:
+        """Mid-run elasticity: admit a booted node (in-process
+        ``NodeRuntime`` or worker handle matching the fleet's backend) to
+        the serving fleet. A dead node's id may be reused — that is the
+        reconnect path: a replacement worker joining under the same id."""
+        if hasattr(node, "wait_ready"):
+            node.wait_ready()
+        nid = node.node_id
+        if nid in self.fleet:
+            raise ValueError(f"node {nid} is already in the fleet")
+        now = self.clock.now()
+        self.fleet[nid] = node
+        self.node_load[nid] = 0
+        self.pending_resv[nid] = 0.0
+        self.qd_ewma[nid] = 0.0
+        self.inflight_cap[nid] = (self.cfg.max_inflight_per_node
+                                  or node.max_slots)
+        self._node_busy_s[nid] = 0.0
+        self._last_traffic[nid] = getattr(node, "ipc_calls", 0)
+        self._last_busy[nid] = 0.0
+        self._max_prompt = max(self._max_prompt, node.s_max - 1)
+        self.registry.register(nid, now)
+        if (self.clock.name == "wall" and self.node_backend != "inproc"
+                and hasattr(node, "set_continuous")):
+            node.set_continuous(True)
+        return nid
+
+    def retire_node(self, nid: int) -> List[int]:
+        """Mid-run elasticity: gracefully drain a node. Its in-flight
+        stages re-enter the ready queue as not-yet-dispatched (same
+        evacuation as death, without the death event) and the worker shuts
+        down. Returns the requeued stage ids."""
+        node = self.fleet.pop(nid, None)
+        if node is None:
+            raise KeyError(f"node {nid} is not in the fleet")
+        if len(self.fleet) == 0:
+            self.fleet[nid] = node
+            raise ValueError(f"cannot retire node {nid}: it is the last "
+                             f"node in the fleet")
+        now = self.clock.now()
+        self._gone_handles.append(node)
+        requeued = self._evacuate_node(nid, now)
+        self.registry.retire(nid, now)
+        close_fleet([node])
+        self._max_prompt = max(n.s_max for n in self.fleet.values()) - 1
+        return requeued
+
     # ---------------------------------------------------------- preemption
     def _decode_progress(self, rec: _InFlight) -> int:
         """Tokens the in-flight stage has produced so far. In-process the
         engine mutates the gateway's own Request; a worker process mutates a
         pickled copy, so the handle's last-step progress snapshot stands in
         — both observe the same engine-step boundary on the virtual clock."""
-        if self.node_backend == "process" and rec.submitted:
+        if self.node_backend != "inproc" and rec.submitted:
             return self.fleet[rec.node_id].out_len(rec.req.req_id)
         return len(rec.req.out)
 

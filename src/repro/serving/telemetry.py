@@ -13,11 +13,22 @@ the trace-driven simulator report the same policy-comparison columns.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.serving.clock import RunDeadlineExceeded
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeDeathEvent:
+    """One worker death as the membership plane recorded it: when, why
+    (transport EOF / heartbeat timeout / dead process reaped), and which
+    in-flight stages were evacuated back to the ready queue."""
+    node_id: int
+    t: float
+    cause: str
+    requeued_stages: Tuple[int, ...] = ()
 
 
 @dataclasses.dataclass
@@ -42,6 +53,8 @@ class StageEvent:
     rejections: int = 0           # routing/admission failures observed
     prior_wait_s: float = 0.0     # wait accrued by attempts aborted by
                                   # preemption (so eviction can't hide delay)
+    worker_deaths: int = 0        # times this stage's node died under it
+                                  # (stage re-entered the ready queue)
 
     @property
     def queue_delay_s(self) -> float:
@@ -125,6 +138,21 @@ class GatewayMetrics:
     prefill_tokens_total: int = 0
     prefill_tokens_avoided: int = 0
     prefix_stats: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # transport + membership plane (PR 7): worker deaths witnessed this
+    # run, the in-flight stages evacuated back to the ready queue because
+    # of them, end-of-run liveness state per node, idle-ping misses, nodes
+    # the straggler detector flags (wall clock only — observations are
+    # real seconds; empty on virtual rows so parity holds), and socket
+    # transport byte counters (zero for inproc/process backends)
+    node_deaths: int = 0
+    requeued_stages: int = 0
+    death_events: List[NodeDeathEvent] = dataclasses.field(
+        default_factory=list)
+    liveness: Dict[int, str] = dataclasses.field(default_factory=dict)
+    heartbeat_misses: int = 0
+    straggler_nodes: List[int] = dataclasses.field(default_factory=list)
+    rpc_bytes_sent: int = 0
+    rpc_bytes_recv: int = 0
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -143,6 +171,8 @@ class Telemetry:
         # per-node worker-process counters (process backend only): IPC round
         # trips, pipe/pickle overhead wall, worker-measured step wall-clock
         self.worker_stats: Dict[int, Dict[str, float]] = {}
+        # membership plane: worker deaths in arrival order
+        self.node_deaths: List[NodeDeathEvent] = []
 
     # ------------------------------------------------------------- recording
     def event(self, stage_id: int, job_id: int, interactive: bool) -> StageEvent:
@@ -159,6 +189,9 @@ class Telemetry:
     def record_worker(self, node_id: int, stats: Dict[str, float]) -> None:
         """End-of-run snapshot of one worker handle's IPC/wall counters."""
         self.worker_stats[node_id] = dict(stats)
+
+    def node_death(self, ev: NodeDeathEvent) -> None:
+        self.node_deaths.append(ev)
 
     # ------------------------------------------------------------ aggregation
     def summary(self, policy: str, jobs, job_finish: Dict[int, float],

@@ -45,6 +45,7 @@ Design points:
 """
 from __future__ import annotations
 
+import argparse
 import collections
 import dataclasses
 import multiprocessing as mp
@@ -52,12 +53,30 @@ import time
 import traceback
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from repro.serving import transport
 from repro.serving.engine import PromptTooLongError, Request
 
 _SHUTDOWN_TIMEOUT_S = 5.0
 # free-running children with idle engines block on the pipe this long per
 # loop pass instead of spinning (wall-clock continuous mode only)
 _IDLE_POLL_S = 0.005
+# how long a locally spawned socket child may take to bind + report its port
+# (no JAX import happens before the report, so this is pure process startup)
+_BOOT_TIMEOUT_S = 60.0
+#: method-surface version carried in the socket hello handshake — bumped
+#: when the request/reply method set changes (the frame format has its own
+#: independent version, ``transport.FRAME_VERSION``)
+PROTOCOL_VERSION = 1
+
+
+class WorkerDied(RuntimeError):
+    """A worker's transport failed mid-protocol: the process was killed
+    (OOM/segfault/SIGKILL) or the socket peer vanished. Carries the node id
+    so the gateway's membership plane can evacuate exactly that node."""
+
+    def __init__(self, node_id: int, msg: str):
+        super().__init__(msg)
+        self.node_id = node_id
 
 
 @dataclasses.dataclass
@@ -163,7 +182,7 @@ def _worker_main(conn, spec: WorkerSpec) -> None:
                 continue
         try:
             method, args = conn.recv()
-        except (EOFError, KeyboardInterrupt):
+        except (EOFError, OSError, KeyboardInterrupt):
             break
         if method == "shutdown":
             conn.send(("ok", None, 0.0))
@@ -193,6 +212,10 @@ def _worker_main(conn, spec: WorkerSpec) -> None:
                 payload = (buffered, progress, buffered_wall,
                            node.signal())
                 buffered, buffered_wall = {}, 0.0
+            elif method == "ping":
+                # idle-period liveness probe from the membership plane: a
+                # no-op round trip whose reply is the heartbeat
+                payload = None
             elif method == "headroom":
                 payload = node.acc.headroom
             elif method == "acc_can_admit":
@@ -238,20 +261,33 @@ class NodeHandle:
 
     def __init__(self, spec: WorkerSpec, ctx=None):
         ctx = ctx or mp.get_context("spawn")
-        self.spec = spec
-        self.node_id = spec.node_id
-        self.cluster_id = spec.cluster_id
+        self._init_state(spec)
         self._conn, child = ctx.Pipe()
         self.proc = ctx.Process(target=_worker_main, args=(child, spec),
                                 name=f"maestro-node-{spec.node_id}",
                                 daemon=True)
-        self.proc.start()
+        try:
+            self.proc.start()
+        except Exception:
+            self.close()
+            raise
         child.close()
+
+    def _init_state(self, spec: WorkerSpec) -> None:
+        """Transport-independent handle state; set FIRST so ``close`` is
+        safe on a handle whose transport setup failed halfway."""
+        self.spec = spec
+        self.node_id = spec.node_id
+        self.cluster_id = spec.cluster_id
+        self._closed = False
         self._ready = False
         # IPC-overhead + worker wall-clock counters (gateway telemetry)
         self.ipc_calls = 0
         self.ipc_wall_s = 0.0
         self.worker_step_wall_s = 0.0
+        # idle-period pings still unanswered when the next came due
+        # (membership plane; see ping_send)
+        self.heartbeat_misses = 0
         self.acc = _AccProxy(self)
         self.profiles: Dict[str, Any] = {}
         self.max_slots = spec.max_slots
@@ -266,12 +302,13 @@ class NodeHandle:
         # wall-clock free-run bookkeeping: the pipe is FIFO, so every
         # outstanding request's reply arrives in send order — `_expected`
         # records what each upcoming reply is (("poll",) / ("submit", rid)
-        # / ("sync", method)) and replies are folded into handle state as
-        # they are consumed
+        # / ("ping",) / ("sync", method)) and replies are folded into
+        # handle state as they are consumed
         self._expected: collections.deque = collections.deque()
         self._finished_buf: Dict[str, List[Request]] = {}
         self._submit_errors: List[int] = []
         self._poll_pending = False
+        self._ping_pending = False
         self._cached_signal = None    # last NodeSignal piggybacked on a poll
 
     # ------------------------------------------------------------- lifecycle
@@ -282,11 +319,12 @@ class NodeHandle:
             return self
         try:
             kind, payload = self._conn.recv()
-        except EOFError:
+        except (EOFError, OSError):
             self.close()
-            raise RuntimeError(
+            raise WorkerDied(
+                self.node_id,
                 f"node {self.node_id} worker died during boot "
-                f"(exitcode={self.proc.exitcode}); note: spawn re-imports "
+                f"({self._exit_status()}); note: spawn re-imports "
                 f"the parent __main__, which must be an importable file")
         if kind != "ready":
             self.close()
@@ -298,19 +336,39 @@ class NodeHandle:
         self._ready = True
         return self
 
+    def _exit_status(self) -> str:
+        proc = getattr(self, "proc", None)
+        if proc is not None:
+            return f"exitcode={proc.exitcode}"
+        return f"remote worker at {getattr(self, 'address', None)}"
+
     def close(self) -> None:
-        if self.proc.is_alive():
+        """Idempotent shutdown, safe on half-constructed handles (partial
+        fleet spawn) and on remote handles that own no local process."""
+        if getattr(self, "_closed", False):
+            return
+        self._closed = True
+        conn = getattr(self, "_conn", None)
+        proc = getattr(self, "proc", None)
+        peer_up = proc.is_alive() if proc is not None else conn is not None
+        if peer_up and conn is not None:
             try:
-                self._conn.send(("shutdown", ()))
-                if self._conn.poll(_SHUTDOWN_TIMEOUT_S):
-                    self._conn.recv()
+                conn.send(("shutdown", ()))
+                if conn.poll(_SHUTDOWN_TIMEOUT_S):
+                    conn.recv()
             except (BrokenPipeError, EOFError, OSError):
                 pass
-        self.proc.join(timeout=_SHUTDOWN_TIMEOUT_S)
-        if self.proc.is_alive():
-            self.proc.terminate()
-            self.proc.join(timeout=_SHUTDOWN_TIMEOUT_S)
-        self._conn.close()
+        if proc is not None and getattr(proc, "_popen", None) is not None:
+            # (guard: join on a never-started Process raises)
+            proc.join(timeout=_SHUTDOWN_TIMEOUT_S)
+            if proc.is_alive():
+                proc.terminate()
+                proc.join(timeout=_SHUTDOWN_TIMEOUT_S)
+        if conn is not None:
+            try:
+                conn.close()
+            except OSError:
+                pass
 
     def __del__(self):  # best-effort: never leak a worker
         try:
@@ -382,6 +440,11 @@ class NodeHandle:
                 raise RuntimeError(
                     f"node {self.node_id} worker error in async "
                     f"submit:\n{payload}")
+        elif tag[0] == "ping":
+            self._ping_pending = False
+            if kind != "ok":                     # pragma: no cover
+                raise RuntimeError(
+                    f"node {self.node_id} worker error in ping:\n{payload}")
         else:                                    # pragma: no cover
             raise AssertionError(f"unknown async reply tag {tag!r}")
 
@@ -464,6 +527,23 @@ class NodeHandle:
         self._expected.append(("submit", req.req_id))
         self._inflight += 1
 
+    def ping_send(self) -> None:
+        """Idle-period liveness probe (membership plane): fire a no-op
+        round trip whose reply — folded in by :meth:`drain_ready` — is the
+        heartbeat. Busy nodes are never pinged (their poll replies already
+        carry liveness); if the previous ping is still unanswered when the
+        next comes due, that is counted as a *heartbeat miss* instead of
+        stacking another request behind a stalled worker."""
+        if self._inflight > 0:
+            return
+        if self._ping_pending:
+            self.heartbeat_misses += 1
+            return
+        self.wait_ready()
+        self._send("ping", ())
+        self._expected.append(("ping",))
+        self._ping_pending = True
+
     def take_submit_errors(self) -> List[int]:
         """Request ids whose async submit was rejected (PromptTooLongError
         in the child) since the last call; the gateway finishes them
@@ -514,24 +594,27 @@ class NodeHandle:
         return self._recv_step()
 
     def _send(self, method: str, args: tuple) -> None:
-        """One request onto the pipe, with a diagnosable error if the worker
-        died mid-run (OOM-kill/segfault) instead of a bare BrokenPipeError."""
+        """One request onto the transport; a dead peer surfaces as a typed
+        :class:`WorkerDied` (node id attached) instead of a bare
+        BrokenPipeError, so the gateway's membership plane can evacuate."""
         try:
             self._conn.send((method, args))
-        except (BrokenPipeError, OSError):
-            raise RuntimeError(
+        except (BrokenPipeError, EOFError, OSError):
+            raise WorkerDied(
+                self.node_id,
                 f"node {self.node_id} worker died before {method!r} "
-                f"(exitcode={self.proc.exitcode})")
+                f"({self._exit_status()})")
 
     def _recv(self, method: str):
-        """One reply off the pipe, with a diagnosable error if the worker
-        died mid-run (OOM-kill/segfault) instead of a bare EOFError."""
+        """One reply off the transport; a dead peer surfaces as a typed
+        :class:`WorkerDied` instead of a bare EOFError."""
         try:
             return self._conn.recv()
-        except EOFError:
-            raise RuntimeError(
+        except (EOFError, OSError):
+            raise WorkerDied(
+                self.node_id,
                 f"node {self.node_id} worker died during {method!r} "
-                f"(exitcode={self.proc.exitcode})")
+                f"({self._exit_status()})")
 
     def _recv_step(self) -> Dict[str, List[Request]]:
         # measure from recv START (not from the broadcast): time a reply
@@ -572,16 +655,180 @@ class NodeHandle:
     def worker_stats(self) -> Dict[str, float]:
         return {"ipc_calls": int(self.ipc_calls),
                 "ipc_wall_s": float(self.ipc_wall_s),
-                "worker_step_wall_s": float(self.worker_step_wall_s)}
+                "worker_step_wall_s": float(self.worker_step_wall_s),
+                "heartbeat_misses": int(self.heartbeat_misses)}
 
 
-def spawn_fleet(specs: Sequence[WorkerSpec]) -> List[NodeHandle]:
+# ---------------------------------------------------------------------------
+# socket backend: the same handle over the framed TCP transport
+# ---------------------------------------------------------------------------
+
+def _serve_conn(conn) -> None:
+    """One gateway connection: validate the hello handshake (protocol
+    version + WorkerSpec), then run the standard worker loop over the
+    framed transport — ``_worker_main`` is transport-agnostic."""
+    try:
+        msg = conn.recv()
+    except (EOFError, OSError):
+        return
+    if not (isinstance(msg, tuple) and len(msg) == 3 and msg[0] == "hello"):
+        conn.send(("boot_error",
+                   f"expected ('hello', version, WorkerSpec) handshake, "
+                   f"got {type(msg).__name__}"))
+        return
+    _, version, spec = msg
+    if version != PROTOCOL_VERSION:
+        conn.send(("boot_error",
+                   f"gateway speaks worker protocol {version}, this worker "
+                   f"speaks {PROTOCOL_VERSION} — rebuild one side"))
+        return
+    _worker_main(conn, spec)
+
+
+def _socket_child_main(bootstrap, host: str) -> None:
+    """Locally spawned socket worker: bind an ephemeral port, report it over
+    the one-shot bootstrap pipe, serve exactly one gateway connection."""
+    srv = transport.listen(host, 0)
+    bootstrap.send(srv.getsockname()[1])
+    bootstrap.close()
+    conn = transport.accept(srv)
+    srv.close()
+    try:
+        _serve_conn(conn)
+    finally:
+        conn.close()
+
+
+class SocketNodeHandle(NodeHandle):
+    """:class:`NodeHandle` whose connection is a :class:`FrameTransport`
+    over TCP instead of a multiprocessing pipe. All protocol machinery —
+    the FIFO ``_expected`` pairing, the async poll/submit hot path, step
+    broadcast, heartbeats — is inherited untouched: both connections expose
+    the same ``send``/``recv``/``poll``/``close`` surface.
+
+    Two ways to get one:
+
+    - constructor: spawn the worker locally (child binds an ephemeral
+      localhost port, reports it over a one-shot bootstrap pipe, parent
+      connects) — this is what ``build_fleet(backend="socket")`` does, and
+      it is protocol-identical to a remote worker;
+    - :meth:`connect`: attach to a worker already listening elsewhere,
+      started standalone with ``python -m repro.serving.worker --listen``.
+    """
+
+    backend = "socket"
+
+    def __init__(self, spec: WorkerSpec, ctx=None, host: str = "127.0.0.1",
+                 boot_timeout_s: float = _BOOT_TIMEOUT_S):
+        ctx = ctx or mp.get_context("spawn")
+        self._init_state(spec)
+        boot, child_boot = ctx.Pipe()
+        self.proc = ctx.Process(target=_socket_child_main,
+                                args=(child_boot, host),
+                                name=f"maestro-socket-node-{spec.node_id}",
+                                daemon=True)
+        try:
+            self.proc.start()
+            child_boot.close()
+            if not boot.poll(boot_timeout_s):
+                raise WorkerDied(
+                    self.node_id,
+                    f"node {self.node_id} socket worker never reported "
+                    f"its port ({self._exit_status()})")
+            port = boot.recv()
+            self.address = (host, int(port))
+            self._conn = transport.connect(self.address)
+            self._conn.send(("hello", PROTOCOL_VERSION, spec))
+        except (EOFError, OSError) as e:
+            self.close()
+            raise WorkerDied(
+                self.node_id,
+                f"node {self.node_id} socket worker died while binding "
+                f"({self._exit_status()}): {e}")
+        except Exception:
+            self.close()
+            raise
+        finally:
+            boot.close()
+
+    @classmethod
+    def connect(cls, address, spec: WorkerSpec,
+                timeout_s: float = 30.0) -> "SocketNodeHandle":
+        """Attach to an already-running worker (``python -m
+        repro.serving.worker --listen HOST:PORT`` on the other host).
+        ``address`` is ``"host:port"`` or a ``(host, port)`` tuple; the
+        returned handle owns no local process (``proc is None``)."""
+        self = cls.__new__(cls)
+        self._init_state(spec)
+        self.proc = None
+        self.address = (transport.parse_address(address)
+                        if isinstance(address, str) else
+                        (address[0], int(address[1])))
+        try:
+            self._conn = transport.connect(self.address, timeout_s=timeout_s)
+            self._conn.send(("hello", PROTOCOL_VERSION, spec))
+        except OSError as e:
+            self.close()
+            raise WorkerDied(
+                self.node_id,
+                f"node {self.node_id}: cannot reach worker at "
+                f"{self.address[0]}:{self.address[1]}: {e}")
+        return self
+
+    def worker_stats(self) -> Dict[str, float]:
+        s = super().worker_stats()
+        conn = getattr(self, "_conn", None)
+        if conn is not None:
+            # transport-overhead columns for BENCH_gateway_socket.json
+            s["bytes_sent"] = int(conn.bytes_sent)
+            s["bytes_recv"] = int(conn.bytes_recv)
+        return s
+
+
+# ---------------------------------------------------------------------------
+# fleet lifecycle
+# ---------------------------------------------------------------------------
+
+_HANDLE_CLASSES = {"process": NodeHandle, "socket": SocketNodeHandle}
+
+
+def spawn_fleet(specs: Sequence[WorkerSpec],
+                backend: str = "process") -> List[NodeHandle]:
     """Spawn one worker per spec, booting in parallel: all processes start
     before any ready handshake is awaited, so fleet boot costs the slowest
-    node, not the sum."""
-    ctx = mp.get_context("spawn")
-    handles = [NodeHandle(s, ctx=ctx) for s in specs]
+    node, not the sum. If any constructor or handshake fails, every
+    already-started worker is torn down before the error propagates — a
+    failed spawn leaks no processes."""
     try:
+        cls = _HANDLE_CLASSES[backend]
+    except KeyError:
+        raise ValueError(f"unknown worker backend {backend!r} "
+                         f"(expected one of {sorted(_HANDLE_CLASSES)})")
+    ctx = mp.get_context("spawn")
+    handles: List[NodeHandle] = []
+    try:
+        for s in specs:
+            handles.append(cls(s, ctx=ctx))
+        for h in handles:
+            h.wait_ready()
+    except Exception:
+        close_fleet(handles)
+        raise
+    return handles
+
+
+def connect_fleet(addresses: Sequence[Any],
+                  specs: Sequence[WorkerSpec]) -> List[NodeHandle]:
+    """Attach to standalone socket workers already listening at
+    ``addresses`` ("host:port" strings or tuples, one per spec, same
+    order). Same teardown-on-failure contract as :func:`spawn_fleet`."""
+    if len(addresses) != len(specs):
+        raise ValueError(f"{len(addresses)} addresses for "
+                         f"{len(specs)} specs")
+    handles: List[NodeHandle] = []
+    try:
+        for addr, spec in zip(addresses, specs):
+            handles.append(SocketNodeHandle.connect(addr, spec))
         for h in handles:
             h.wait_ready()
     except Exception:
@@ -593,8 +840,54 @@ def spawn_fleet(specs: Sequence[WorkerSpec]) -> List[NodeHandle]:
 def close_fleet(fleet: Sequence[Any]) -> None:
     """Shut down every worker handle in a (possibly mixed) fleet; in-process
     ``NodeRuntime`` members are left untouched. Safe to call even when the
-    gateway was never constructed (the constructor-failure path) and safe to
-    call twice — handle close is idempotent."""
+    gateway was never constructed (the constructor-failure path), safe on
+    half-constructed handles, and safe to call twice — handle close is
+    idempotent and a close failure never strands the rest of the fleet."""
     for node in fleet:
         if hasattr(node, "close"):
-            node.close()
+            try:
+                node.close()
+            except Exception:       # best-effort teardown: keep going
+                traceback.print_exc()
+
+
+# ---------------------------------------------------------------------------
+# standalone worker entry point (remote hosts)
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    """``python -m repro.serving.worker --listen HOST:PORT`` — run a worker
+    that serves gateway connections over the socket transport. The node's
+    configuration (``WorkerSpec``) arrives in the gateway's hello, so one
+    listening worker can serve successive runs with different specs."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serving.worker",
+        description="Standalone Maestro worker node (socket transport). "
+                    "TRUSTED NETWORKS ONLY: the wire protocol is pickle.")
+    ap.add_argument("--listen", required=True, metavar="HOST:PORT",
+                    help="bind address (port 0 picks an ephemeral port)")
+    ap.add_argument("--once", action="store_true",
+                    help="exit after serving one gateway connection "
+                         "instead of accepting the next")
+    args = ap.parse_args(argv)
+    host, port = transport.parse_address(args.listen)
+    srv = transport.listen(host, port)
+    bound = srv.getsockname()
+    print(f"[worker] listening on {bound[0]}:{bound[1]}", flush=True)
+    try:
+        while True:
+            conn = transport.accept(srv)
+            try:
+                _serve_conn(conn)
+            finally:
+                conn.close()
+            if args.once:
+                break
+    except KeyboardInterrupt:
+        pass
+    finally:
+        srv.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Membership plane: FleetRegistry state machine (pure, explicit-``now``
+unit tests), straggler demotion, and mid-run elastic register/retire
+through the gateway."""
+import numpy as np
+import pytest
+
+from repro.data.tracegen import generate_trace
+from repro.distributed.fault import StragglerDetector
+from repro.serving.cluster import (ClusterSpec, NodeSpec, build_fleet,
+                                   build_zoo, jobs_from_trace)
+from repro.serving.gateway import ClusterGateway
+from repro.serving.node_runtime import NodeRuntime
+from repro.serving.registry import (DEAD, HEALTHY, RETIRED, SUSPECT,
+                                    FleetRegistry, HeartbeatConfig)
+
+RTT = np.array([[0.001, 0.04], [0.04, 0.001]])
+
+
+def test_heartbeat_config_validation():
+    HeartbeatConfig(0.1, 0.4, 1.0)                     # valid
+    with pytest.raises(ValueError):
+        HeartbeatConfig(interval_s=0.0)                # no zero cadence
+    with pytest.raises(ValueError):
+        HeartbeatConfig(interval_s=2.0, suspect_after_s=1.0)
+    with pytest.raises(ValueError):
+        HeartbeatConfig(suspect_after_s=9.0, dead_after_s=5.0)
+
+
+def test_liveness_state_machine():
+    reg = FleetRegistry(HeartbeatConfig(0.1, 0.4, 1.0))
+    reg.register(0, 0.0)
+    reg.register(1, 0.0)
+
+    assert reg.update(0.2) == []                       # everyone fresh
+    assert reg.states() == {0: HEALTHY, 1: HEALTHY}
+
+    reg.beat(1, 0.45)
+    assert reg.update(0.5) == []                       # aging demotes, not kills
+    assert reg.state(0) == SUSPECT
+    assert "heartbeat age" in reg.members[0].suspect_cause
+    assert reg.state(1) == HEALTHY
+    assert reg.suspects() == [0]
+
+    reg.beat(0, 0.6)                                   # fresh beat recovers
+    assert reg.update(0.7) == []
+    assert reg.states() == {0: HEALTHY, 1: HEALTHY}
+
+    reg.beat(1, 1.9)
+    assert reg.update(2.0) == [0]                      # silent past dead_after_s
+    assert reg.state(0) == DEAD
+    assert "timeout" in reg.members[0].death_cause
+    assert reg.deaths == [0]
+    assert reg.live() == [1]
+
+    beats = reg.members[0].beats                       # dead members stay dead
+    reg.beat(0, 2.1)
+    reg.mark_dead(0, 2.2)
+    assert reg.members[0].beats == beats and reg.deaths == [0]
+
+    reg.register(0, 3.0)                               # replacement, same id
+    reg.beat(1, 3.0)
+    assert reg.state(0) == HEALTHY and reg.live() == [0, 1]
+    assert reg.update(3.1) == []
+
+
+def test_retire_and_transport_death():
+    reg = FleetRegistry(HeartbeatConfig(0.1, 0.4, 1.0))
+    for nid in (0, 1):
+        reg.register(nid, 0.0)
+    reg.retire(1, 0.5)
+    assert reg.state(1) == RETIRED and reg.live() == [0]
+    assert reg.update(5.0) == [0]                      # retired is not dead
+    assert reg.deaths == [0]
+    reg.retire(0, 6.0)                                 # retiring dead: no-op
+    assert reg.state(0) == DEAD
+
+    reg2 = FleetRegistry()
+    reg2.register(3, 0.0)
+    reg2.mark_dead(3, 0.1, cause="transport EOF")      # WorkerDied path
+    assert reg2.members[3].death_cause == "transport EOF"
+    assert reg2.deaths == [3]
+
+
+def test_straggler_demotion_and_forget():
+    det = StragglerDetector(z_thresh=1.5, min_obs=4)
+    reg = FleetRegistry(HeartbeatConfig(0.1, 0.4, 1.0), detector=det)
+    for nid in range(4):
+        reg.register(nid, 0.0)
+    for _ in range(8):                                 # node 3 is 100x slower
+        for nid in range(3):
+            reg.observe_step(nid, 0.01)
+        reg.observe_step(3, 1.0)
+    for nid in range(4):
+        reg.beat(nid, 0.05)                            # heartbeats all current
+    assert reg.update(0.1) == []
+    assert reg.state(3) == SUSPECT                     # slow, not silent
+    assert reg.members[3].suspect_cause == "straggler"
+    assert reg.states() == {0: HEALTHY, 1: HEALTHY, 2: HEALTHY, 3: SUSPECT}
+    assert reg.stragglers() == [3]
+
+    reg.mark_dead(3, 0.2)                              # death forgets history
+    assert 3 not in det.mean
+    assert reg.stragglers() == []                      # only live members count
+
+    reg.observe_step(9, 0.0)                           # non-positive: ignored
+    assert 9 not in det.mean
+
+
+def test_elastic_membership_mid_run():
+    """Gateway-level elasticity under the virtual clock: a node registered
+    mid-run takes real work; a retired node's in-flight stages re-enter the
+    queue and finish elsewhere; the run completes."""
+    spec = ClusterSpec(nodes=(NodeSpec(0), NodeSpec(1)),
+                       model_names=("qwen3-8b",))
+    jobs = jobs_from_trace(generate_trace(n_jobs=8, seed=9, rate=4.0),
+                           n_clusters=2, gen_cap=8)
+    fleet = build_fleet(spec, backend="inproc")
+    gw = ClusterGateway(fleet, RTT, policy="fcfs")
+    gw.submit_jobs(jobs)
+    gw.clock.set_deadline(gw._auto_deadline_s(jobs))
+    zoo, host = build_zoo(("qwen3-8b",), seed=1)
+    added = retired = False
+    requeued = []
+    while gw._unfinished() and not gw.clock.expired():
+        gw.step()
+        if not added and len(gw.done) >= 4:
+            gw.register_node(NodeRuntime(2, 1, zoo, host))
+            with pytest.raises(ValueError, match="already"):
+                gw.register_node(NodeRuntime(2, 1, zoo, host))
+            added = True
+        if added and not retired and len(gw.done) >= 8:
+            requeued = gw.retire_node(0)
+            retired = True
+    m = gw.metrics()
+    assert added and retired
+    assert m.finished_jobs == len(jobs)
+    assert m.liveness == {0: "retired", 1: "healthy", 2: "healthy"}
+    landed = {e.node_id for e in gw.telemetry.events.values()
+              if e.finish_t > 0}
+    assert 2 in landed                       # the late joiner served stages
+    for sid in requeued:                     # retired node's work finished
+        assert gw.telemetry.events[sid].finish_t > 0
+    with pytest.raises(KeyError):
+        gw.retire_node(0)                    # already gone
+    with pytest.raises(ValueError, match="last"):
+        for nid in list(gw.fleet):
+            gw.retire_node(nid)              # cannot drain the whole fleet
+    assert len(gw.fleet) == 1

@@ -1,0 +1,200 @@
+"""Socket transport plane: framing unit tests, the socket node backend's
+bit-identical virtual-clock parity, and the standalone worker entry point.
+
+Parity bar (same as the process backend's in test_worker.py): under the
+deterministic virtual clock a localhost socket fleet must produce the SAME
+completion sets and the SAME metrics as the in-process fleet — and since
+test_worker.py pins process == inproc, socket == inproc pins all three
+backends to one outcome."""
+import os
+import re
+import socket
+import struct
+import subprocess
+import sys
+
+import pytest
+
+from repro.data.tracegen import generate_trace
+from repro.serving import transport
+from repro.serving.cluster import (ClusterSpec, NodeSpec, jobs_from_trace,
+                                   worker_specs)
+from repro.serving.engine import Request
+from repro.serving.transport import (FRAME_VERSION, MAGIC, FrameTransport,
+                                     ProtocolVersionError, TransportError,
+                                     parse_address)
+from repro.serving.worker import SocketNodeHandle
+from test_worker import RTT, ZOO_NAMES, _assert_parity, _run
+
+
+def _pair():
+    a, b = socket.socketpair()
+    return FrameTransport(a), FrameTransport(b)
+
+
+# ---------------------------------------------------------------- framing
+
+def test_frame_roundtrip_and_counters():
+    a, b = _pair()
+    try:
+        payloads = [("step", ()), {"x": [1, 2, 3]}, None,
+                    Request(req_id=9, tokens=[1, 2], max_new=4)]
+        for obj in payloads:
+            a.send(obj)
+        for obj in payloads:
+            got = b.recv()
+            if isinstance(obj, Request):
+                assert got.req_id == obj.req_id and got.tokens == obj.tokens
+            else:
+                assert got == obj
+        assert a.frames_sent == b.frames_recv == len(payloads)
+        assert a.bytes_sent == b.bytes_recv > 0
+        assert a.bytes_recv == b.bytes_sent == 0
+    finally:
+        a.close()
+        b.close()
+
+
+def test_poll_semantics():
+    a, b = _pair()
+    try:
+        assert not b.poll(0.0)
+        a.send("hello")
+        assert b.poll(1.0)
+        assert b.recv() == "hello"
+        assert not b.poll(0.0)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_eof_on_peer_close():
+    a, b = _pair()
+    a.close()
+    try:
+        assert b.poll(1.0)               # EOF counts as readable
+        with pytest.raises(EOFError):
+            b.recv()
+    finally:
+        b.close()
+
+
+def test_bad_magic_rejected():
+    a, b = socket.socketpair()
+    t = FrameTransport(b)
+    try:
+        a.sendall(b"GARBAGE_" + b"\x00" * 8)
+        with pytest.raises(TransportError, match="magic"):
+            t.recv()
+    finally:
+        a.close()
+        t.close()
+
+
+def test_version_mismatch_is_typed():
+    a, b = socket.socketpair()
+    t = FrameTransport(b)
+    try:
+        hdr = struct.Struct("!4sBxxxI").pack(MAGIC, FRAME_VERSION + 1, 0)
+        a.sendall(hdr)
+        with pytest.raises(ProtocolVersionError, match="version"):
+            t.recv()
+    finally:
+        a.close()
+        t.close()
+
+
+def test_oversized_frame_rejected():
+    a, b = socket.socketpair()
+    t = FrameTransport(b)
+    try:
+        hdr = struct.Struct("!4sBxxxI").pack(MAGIC, FRAME_VERSION,
+                                             transport.MAX_FRAME_BYTES + 1)
+        a.sendall(hdr)
+        with pytest.raises(TransportError, match="length"):
+            t.recv()
+    finally:
+        a.close()
+        t.close()
+
+
+def test_close_idempotent():
+    a, b = _pair()
+    b.close()
+    a.close()
+    a.close()                            # second close is a no-op
+
+
+def test_parse_address():
+    assert parse_address("127.0.0.1:9000") == ("127.0.0.1", 9000)
+    assert parse_address("host.example:0") == ("host.example", 0)
+    for bad in ("nohost", ":123", "h:", "h:port"):
+        with pytest.raises(ValueError):
+            parse_address(bad)
+
+
+# ------------------------------------------------- socket backend parity
+
+def test_socket_backend_virtual_parity():
+    """Localhost socket fleet under the virtual clock: identical completion
+    sets and bit-identical metrics vs the in-process fleet, with real bytes
+    on the wire (transport counters > 0)."""
+    specs = [NodeSpec(0, max_slots=2), NodeSpec(1, max_slots=2)]
+
+    def jobs():
+        return jobs_from_trace(generate_trace(3, rate=2.0, seed=5),
+                               n_clusters=2, prompt_cap=8, gen_cap=8, seed=2)
+
+    m_in, ev_in = _run("inproc", jobs, specs)
+    m_sock, ev_sock = _run("socket", jobs, specs)
+    assert m_sock.node_backend == "socket"
+    _assert_parity(m_in, ev_in, m_sock, ev_sock)
+    assert m_sock.rpc_bytes_sent > 0 and m_sock.rpc_bytes_recv > 0
+    assert set(m_sock.worker_stats) == {0, 1}
+    for stats in m_sock.worker_stats.values():
+        assert stats["bytes_sent"] > 0 and stats["bytes_recv"] > 0
+    assert m_in.rpc_bytes_sent == 0
+
+
+# --------------------------------------------- standalone worker process
+
+def test_standalone_worker_cli():
+    """`python -m repro.serving.worker --listen` + SocketNodeHandle.connect:
+    the remote-host deployment path, exercised over localhost."""
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (env.get("PYTHONPATH"),
+                    os.path.join(os.path.dirname(__file__), "..", "src"))
+        if p)
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.serving.worker",
+         "--listen", "127.0.0.1:0", "--once"],
+        stdout=subprocess.PIPE, text=True, env=env)
+    h = None
+    try:
+        line = proc.stdout.readline()
+        m = re.search(r"listening on ([\d.]+):(\d+)", line)
+        assert m, f"no listen banner in {line!r}"
+        spec = worker_specs(ClusterSpec(nodes=(NodeSpec(0),), rtt_s=RTT,
+                                        model_names=ZOO_NAMES))[0]
+        h = SocketNodeHandle.connect((m.group(1), int(m.group(2))), spec)
+        h.wait_ready()
+        assert h.proc is None                       # no local child
+        assert set(h.profiles) == set(ZOO_NAMES)
+        assert h.signal().node_id == 0
+        h.submit(ZOO_NAMES[0], Request(req_id=1, tokens=[1, 2, 3],
+                                       max_new=2))
+        done = {}
+        for _ in range(20):
+            for _, reqs in h.step().items():
+                done.update((r.req_id, r) for r in reqs)
+            if done:
+                break
+        assert len(done[1].out) == 2
+        assert h.worker_stats()["bytes_sent"] > 0
+    finally:
+        if h is not None:
+            h.close()
+            h.close()                               # idempotent
+        proc.wait(timeout=30)
+    assert proc.returncode == 0

@@ -4,6 +4,8 @@ The acceptance bar for the process backend is exact reproducibility: under
 the gateway's deterministic virtual clock, a fleet of worker processes must
 produce the SAME completion sets and the SAME metrics as the cooperative
 in-process fleet — concurrency changes wall-clock, never the outcome."""
+import multiprocessing as mp
+
 import numpy as np
 import pytest
 
@@ -13,15 +15,18 @@ from repro.serving.cluster import (ClusterSpec, LiveJob, LiveStage, NodeSpec,
                                    build_fleet, jobs_from_trace)
 from repro.serving.engine import PromptTooLongError, Request
 from repro.serving.gateway import ClusterGateway, GatewayConfig
-from repro.serving.worker import NodeHandle, WorkerSpec, close_fleet
+from repro.serving.worker import (NodeHandle, WorkerSpec, close_fleet,
+                                  spawn_fleet)
 
 RTT = np.array([[0.001, 0.04], [0.04, 0.001]])
 ZOO_NAMES = ("qwen3-8b",)
 
 # GatewayMetrics fields that legitimately differ between backends: the
-# backend tag itself and the wall-clock/IPC accounting of the workers
+# backend tag itself, the wall-clock/IPC accounting of the workers, and
+# the socket transport's byte counters (zero on pipe backends)
 BACKEND_ONLY = {"node_backend", "ipc_calls", "ipc_wall_s",
-                "worker_step_wall_s", "worker_stats"}
+                "worker_step_wall_s", "worker_stats",
+                "rpc_bytes_sent", "rpc_bytes_recv"}
 
 
 def _run(backend, make_jobs, specs, policy="fcfs", predictor=None):
@@ -136,6 +141,33 @@ def test_worker_handle_protocol():
         h.close()
         h.close()                                  # second close is a no-op
     assert not h.proc.is_alive()
+
+
+def test_partial_spawn_failure_leaks_no_workers():
+    """If one node of a fleet fails its boot handshake, spawn_fleet tears
+    down every already-started worker before raising — a failed spawn
+    leaves no orphan processes behind (regression: the old loop started
+    workers one by one and abandoned the live ones on the first failure)."""
+    before = {p.pid for p in mp.active_children()}
+    specs = [WorkerSpec(node_id=0, cluster_id=0, model_names=ZOO_NAMES),
+             WorkerSpec(node_id=1, cluster_id=0,
+                        model_names=("no-such-model",))]
+    with pytest.raises(RuntimeError, match="failed to boot"):
+        spawn_fleet(specs)
+    leaked = [p for p in mp.active_children()
+              if p.pid not in before and p.is_alive()]
+    assert not leaked, f"spawn failure leaked workers: {leaked}"
+
+
+def test_close_fleet_safe_on_half_constructed_handles():
+    """close_fleet / handle.close must be callable on handles whose
+    constructor never completed (no process, no pipe) and must be
+    idempotent — this is the teardown path of a failed spawn."""
+    h = NodeHandle.__new__(NodeHandle)
+    h._init_state(WorkerSpec(node_id=3, cluster_id=0,
+                             model_names=ZOO_NAMES))
+    close_fleet([h, object()])     # non-handle members are skipped
+    close_fleet([h])               # second close is a no-op
 
 
 def test_process_backend_requires_worker_fleet(zoo_host=None):
