@@ -1,0 +1,187 @@
+"""Engine iteration-scheduler benchmark: chunked prefill vs monolithic.
+
+Serves the same varied-prompt-length trace through the live gateway on an
+IDENTICAL fixed fleet twice — once with monolithic prefill
+(``prefill_chunk_tokens=0``, the pre-PR engine loop) and once with the
+token-budget iteration scheduler (fixed-width prefill chunks fused with
+decode under ``max_batch_tokens``) — and reports the throughput and TTFT
+deltas. Persisted by ``benchmarks.run`` as ``BENCH_engine_batching.json``.
+
+Three legs:
+
+* **parity** (virtual clock, deterministic): both engine configurations
+  must finish the SAME stage set with the SAME per-stage output lengths —
+  the gateway-level restatement of the engine's output-level parity
+  contract (greedy tokens identical, chunked vs monolithic). Asserted on
+  every run including CI smoke.
+* **wall/monolithic vs wall/chunked**: real-elapsed-time serving after
+  ``gw.warmup()``. Monolithic prefill re-traces once per distinct prompt
+  length per engine (warmup can only cover one length), so on a trace with
+  many prompt lengths its measured window is dominated by recompiles; the
+  chunked engine runs every prompt through ONE compiled chunk shape. The
+  headline columns are ``chunked_speedup_x`` (ratio of
+  ``throughput_stages_per_s``, asserted ≥ 2x on sized runs) and the TTFT
+  p95 reduction (asserted whenever both legs report one — chunking bounds
+  time-to-first-schedule by the chunk width instead of the longest
+  queued prompt, and skips the per-length retrace stall).
+
+Wall rows are machine-dependent and never clobber virtual baselines; like
+``BENCH_gateway_wall.json`` they are re-baselined per host (see
+docs/BENCHMARKS.md).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from benchmarks.common import banner, get_trace
+from repro.serving.cluster import (ClusterSpec, NodeSpec, build_fleet,
+                                   jobs_from_trace)
+from repro.serving.gateway import ClusterGateway, GatewayConfig
+from repro.serving.worker import close_fleet
+
+#: prompt-length cap handed to jobs_from_trace — deliberately HIGH so the
+#: trace carries many distinct prompt lengths (the regime where monolithic
+#: prefill pays one retrace per length and chunking pays one total)
+PROMPT_CAP = 16
+
+
+#: the fleet serves the self-attention zoo models only: mamba2's SSM
+#: prefill cannot chunk (the knob degrades to monolithic on BOTH legs —
+#: covered by tests), so including it would only add identical per-length
+#: retrace cost to both legs and dilute the measured effect
+ZOO = ("qwen3-8b", "starcoder2-15b")
+
+
+def _spec(chunk: int, budget: Optional[int]) -> ClusterSpec:
+    # same fixed fleet for every leg (3 nodes over 3 clusters, batch-8
+    # engines, roomy HBM) — ONLY the iteration-scheduler knobs differ
+    mk = lambda c: NodeSpec(c, max_slots=8, hbm_budget=2e9,  # noqa: E731
+                            prefill_chunk_tokens=chunk,
+                            max_batch_tokens=budget)
+    return ClusterSpec(nodes=(mk(0), mk(1), mk(2)), model_names=ZOO)
+
+
+def _serve(chunk: int, budget: Optional[int], trace, *, clock: str,
+           backend: str, seed: int, gen_cap: int, max_run_s: float,
+           warmup: bool):
+    spec = _spec(chunk, budget)
+    fleet = build_fleet(spec, backend=backend)
+    try:
+        gw = ClusterGateway(
+            fleet, spec.rtt_s, policy="fcfs",
+            cfg=GatewayConfig(clock=clock, node_backend=backend,
+                              max_inflight_per_node=12,
+                              max_run_s=max_run_s))
+        if warmup:
+            gw.warmup()
+        jobs = jobs_from_trace(trace, n_clusters=spec.n_clusters, seed=seed,
+                               prompt_cap=PROMPT_CAP, gen_cap=gen_cap)
+        m = gw.run(jobs)
+        outs = {sid: e.out_len for sid, e in gw.telemetry.events.items()}
+    finally:
+        close_fleet(fleet)
+    return m, outs
+
+
+def main(n_jobs: int = 24, rate: float = 8.0, seed: int = 7,
+         backend: str = "inproc", gen_cap: int = 16, chunk: int = 16,
+         max_batch_tokens: int = 64, repeats: int = 2,
+         max_run_s: float = 900.0, assert_speedup: bool = True) -> Dict:
+    banner(f"engine-batching: chunked prefill vs monolithic ({n_jobs} jobs, "
+           f"chunk={chunk}, budget={max_batch_tokens}, {backend} fleet)")
+    trace = get_trace(n_jobs, seed=seed, rate=rate)
+    legs = {"monolithic": (0, None), "chunked": (chunk, max_batch_tokens)}
+
+    # ---- parity leg: deterministic virtual clock, outputs must match
+    parity: Dict[str, Dict[int, int]] = {}
+    for name, (c, b) in legs.items():
+        m, outs = _serve(c, b, trace, clock="virtual", backend=backend,
+                         seed=seed, gen_cap=gen_cap, max_run_s=max_run_s,
+                         warmup=False)
+        assert m.finished_jobs == n_jobs, \
+            f"parity/{name}: {m.finished_jobs}/{n_jobs} finished " \
+            f"({m.run_outcome})"
+        parity[name] = outs
+        if name == "chunked":
+            assert m.engine_prefill_compiles > 0
+    assert parity["chunked"] == parity["monolithic"], \
+        "chunked engine diverged from monolithic outputs"
+    print(f"[engine-batching] parity: {len(parity['chunked'])} stages, "
+          f"chunked outputs == monolithic outputs")
+
+    # ---- wall legs: interleaved repeats, best-of per leg
+    rows: List[Dict] = []
+    best: Dict[str, Dict[str, float]] = {
+        n: {"tps": 0.0, "ttft": float("inf")} for n in legs}
+    for rep in range(max(1, repeats)):
+        for name, (c, b) in legs.items():
+            t0 = time.time()
+            m, _ = _serve(c, b, trace, clock="wall", backend=backend,
+                          seed=seed, gen_cap=gen_cap, max_run_s=max_run_s,
+                          warmup=True)
+            wall = time.time() - t0
+            # completion, not latency: wall rows may never flake CI
+            assert m.finished_jobs > 0, \
+                f"wall/{name}: no jobs finished ({m.run_outcome})"
+            best[name]["tps"] = max(best[name]["tps"],
+                                    m.throughput_stages_per_s)
+            if m.ttft_p95_s > 0:
+                best[name]["ttft"] = min(best[name]["ttft"], m.ttft_p95_s)
+            row = m.row()
+            row["leg"] = name
+            row["repeat"] = rep
+            row["prefill_chunk_tokens"] = c
+            row["max_batch_tokens"] = b
+            rows.append(row)
+            print(f"[engine-batching] {name:>10} r{rep}: "
+                  f"tput={m.throughput_stages_per_s:.2f} st/s "
+                  f"ttft_p95={m.ttft_p95_s:.3f}s "
+                  f"prefill_compiles={m.engine_prefill_compiles} "
+                  f"fused_steps={m.engine_fused_steps} "
+                  f"fin={m.finished_jobs}/{n_jobs} ({wall:.0f}s wall)")
+
+    speedup = best["chunked"]["tps"] / max(best["monolithic"]["tps"], 1e-9)
+    ttft_ratio = (best["monolithic"]["ttft"] / best["chunked"]["ttft"]
+                  if best["chunked"]["ttft"] < float("inf")
+                  and best["monolithic"]["ttft"] < float("inf") else 0.0)
+    print(f"[engine-batching] chunked speedup {speedup:.2f}x "
+          f"(tput {best['monolithic']['tps']:.2f} -> "
+          f"{best['chunked']['tps']:.2f} st/s), "
+          f"ttft p95 {best['monolithic']['ttft']:.3f}s -> "
+          f"{best['chunked']['ttft']:.3f}s ({ttft_ratio:.1f}x better)")
+    # TTFT bar: chunking removes the per-length retrace stall in front of
+    # the first token, a >10x effect on CPU — asserted even on smoke
+    if ttft_ratio:
+        assert best["chunked"]["ttft"] < best["monolithic"]["ttft"], \
+            f"chunked TTFT p95 did not improve: {best}"
+    if assert_speedup:
+        # the acceptance bar for the iteration scheduler (sized runs only)
+        assert speedup >= 2.0, \
+            f"chunked throughput speedup {speedup:.2f}x < 2x ({best})"
+
+    return {
+        "n_jobs": n_jobs,
+        "n_stages": sum(len(j.stages) for j in trace),
+        "rate_jobs_per_s": rate,
+        "gen_cap": gen_cap,
+        "prompt_cap": PROMPT_CAP,
+        "prefill_chunk_tokens": chunk,
+        "max_batch_tokens": max_batch_tokens,
+        "nodes": 3,
+        "max_slots": 8,
+        "zoo": list(ZOO),
+        "node_backend": backend,
+        "repeats": repeats,
+        "warmup": True,
+        "parity_stages": len(parity["chunked"]),
+        "chunked_speedup_x": round(speedup, 2),
+        "ttft_p95_monolithic_s": round(best["monolithic"]["ttft"], 4),
+        "ttft_p95_chunked_s": round(best["chunked"]["ttft"], 4),
+        "ttft_improvement_x": round(ttft_ratio, 2),
+        "rows": rows,
+    }
+
+
+if __name__ == "__main__":
+    main()

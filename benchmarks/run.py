@@ -35,9 +35,9 @@ SMOKE_POLICIES = ("fcfs", "maestro")
 
 def _register(mode: str, backend: str = "inproc",
               clock: str = "virtual") -> None:
-    from benchmarks import (activation, colocation, fitness, gateway, kernels,
-                            memory, prediction, preemption, prefix_reuse,
-                            scheduling)
+    from benchmarks import (activation, colocation, engine_batching, fitness,
+                            gateway, kernels, memory, prediction, preemption,
+                            prefix_reuse, scheduling)
     fast = mode != "full"
     smoke = mode == "smoke"
     if clock == "wall":
@@ -60,6 +60,14 @@ def _register(mode: str, backend: str = "inproc",
         "gateway_socket": lambda: gateway.socket_main(
             n_jobs={"full": 48, "fast": 12, "smoke": 5}[mode],
             fault_jobs=6),
+        "engine_batching": lambda: engine_batching.main(
+            n_jobs={"full": 32, "fast": 24, "smoke": 4}[mode],
+            rate={"full": 8.0, "fast": 8.0, "smoke": 2.0}[mode],
+            gen_cap={"full": 24, "fast": 16, "smoke": 6}[mode],
+            max_run_s={"full": 1800.0, "fast": 900.0, "smoke": 300.0}[mode],
+            repeats=1 if smoke else 2,
+            backend=backend,
+            assert_speedup=not smoke),
         "prefix_reuse": lambda: prefix_reuse.main(
             n_jobs={"full": 96, "fast": 24, "smoke": 10}[mode], fast=fast,
             backend=backend, include_wall=(mode == "full")),

@@ -1,0 +1,128 @@
+"""Pallas TPU chunked-prefill attention — the prefill half of the engine's
+fused iteration loop (continuous batching with chunked prefill).
+
+A fixed-width chunk of C prompt tokens per sequence attends to everything
+already written to its arena pages — earlier chunks of the same prompt and
+the current chunk's own K/V, which the caller scatters into the pages before
+attending — under a causal mask on absolute token positions. The fixed
+[B, C] query shape is the whole point: every chunk of every prompt reuses
+one compiled executable, killing the per-prompt-length recompiles of
+monolithic prefill.
+
+Grid (batch, page_slots); the page-slot dimension is innermost/sequential so
+online-softmax state persists in VMEM scratch, exactly like
+``paged_attention``. The block table and per-sequence visible-KV lengths are
+scalar-prefetched and drive the K/V page BlockSpec index maps. GQA: q
+[B, C, H, hd] is regrouped to [Hkv, C*g, hd] inside the kernel; K/V pages
+keep their native [page, Hkv, hd] layout (never repeated).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _chunk_kernel(block_table, k_lens, q_ref, pos_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, page_size: int, n_slots: int,
+                  scale: float):
+    b = pl.program_id(0)
+    s = pl.program_id(1)          # page slot (sequential)
+
+    @pl.when(s == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    n_used = pl.cdiv(k_lens[b], page_size)
+
+    @pl.when(s < n_used)
+    def _compute():
+        q = q_ref[0]                                   # [C, H, hd]
+        k = k_ref[0]                                   # [page, Hkv, hd]
+        v = v_ref[0]
+        C, H, hd = q.shape
+        Hkv = k.shape[1]
+        g = H // Hkv
+        # head h = kvh*g + sub (jnp.repeat order) -> rows grouped by kv head
+        qg = (q.reshape(C, Hkv, g, hd).transpose(1, 0, 2, 3)
+              .reshape(Hkv, C * g, hd).astype(jnp.float32))
+        kf = k.astype(jnp.float32)
+        # scores [Hkv, C*g, page]
+        sc = jax.lax.dot_general(
+            qg, kf, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * scale
+        qpos = jnp.repeat(pos_ref[0], g)               # [C*g]
+        kpos = s * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, sc.shape, 2)
+        sc = jnp.where(qpos[None, :, None] >= kpos, sc, NEG_INF)
+        m_prev = m_scr[...]                            # [Hkv, C*g, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=2, keepdims=True))
+        p = jnp.exp(sc - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=2, keepdims=True)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((2,), (0,)), ((0,), (1,))))
+        acc_scr[...] = acc_scr[...] * alpha + pv       # [Hkv, C*g, hd]
+
+    @pl.when(s == n_slots - 1)
+    def _finalize():
+        acc = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        C, H, hd = o_ref.shape[1], o_ref.shape[2], o_ref.shape[3]
+        Hkv = acc.shape[0]
+        o_ref[0] = (acc.reshape(Hkv, C, H // Hkv, hd).transpose(1, 0, 2, 3)
+                    .reshape(C, H, hd).astype(o_ref.dtype))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("page_size", "interpret"))
+def chunk_prefill_attention(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, block_table: jax.Array,
+                            positions: jax.Array, page_size: int = 64,
+                            interpret: bool = False) -> jax.Array:
+    """q [B, C, H, hd]; {k,v}_pages [n_pages, page_size, Hkv, hd];
+    block_table [B, max_slots] int32; positions [B, C] int32 absolute
+    positions of the chunk tokens. -> [B, C, H, hd].
+
+    The caller must have scattered this chunk's K/V into the pages already;
+    per-sequence visible KV length is ``max(positions) + 1`` (pad rows repeat
+    position 0 and attend harmlessly to the first written token).
+    """
+    B, C, H, hd = q.shape
+    Hkv = k_pages.shape[2]
+    n_slots = block_table.shape[1]
+    k_lens = jnp.max(positions, axis=1) + 1
+    grid = (B, n_slots)
+    kernel = functools.partial(_chunk_kernel, page_size=page_size,
+                               n_slots=n_slots, scale=hd ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C, H, hd), lambda b, s, bt, kl: (b, 0, 0, 0)),
+            pl.BlockSpec((1, C), lambda b, s, bt, kl: (b, 0)),
+            pl.BlockSpec((1, page_size, Hkv, hd),
+                         lambda b, s, bt, kl: (bt[b, s], 0, 0, 0)),
+            pl.BlockSpec((1, page_size, Hkv, hd),
+                         lambda b, s, bt, kl: (bt[b, s], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, H, hd),
+                               lambda b, s, bt, kl: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, C * (H // Hkv), 1), jnp.float32),
+            pltpu.VMEM((Hkv, C * (H // Hkv), 1), jnp.float32),
+            pltpu.VMEM((Hkv, C * (H // Hkv), hd), jnp.float32),
+        ],
+    )
+    fn = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C, H, hd), q.dtype),
+        interpret=interpret)
+    return fn(block_table, k_lens, q, positions, k_pages, v_pages)

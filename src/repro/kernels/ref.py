@@ -48,6 +48,35 @@ def paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens):
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def chunk_prefill_attention_ref(q, k_pages, v_pages, block_table, positions):
+    """Chunked-prefill attention: a fixed-width chunk of C query tokens per
+    sequence attends to everything already written to its arena pages
+    (earlier chunks AND this chunk's own K/V, which the caller scatters in
+    before attending) under a causal mask on absolute positions.
+
+    q [B,C,H,hd]; pages [n_pages, page, Hkv, hd]; block_table [B, slots];
+    positions [B,C] int32 absolute positions of the chunk's tokens (pad rows
+    may repeat a position — they attend somewhere valid and are discarded).
+    -> [B,C,H,hd].
+    """
+    B, C, H, hd = q.shape
+    n_pages, page, Hkv, _ = k_pages.shape
+    slots = block_table.shape[1]
+    k = k_pages[block_table].reshape(B, slots * page, Hkv, hd)
+    v = v_pages[block_table].reshape(B, slots * page, Hkv, hd)
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * (hd ** -0.5)
+    kpos = jnp.arange(slots * page)
+    mask = positions[:, :, None] >= kpos[None, None, :]
+    s = jnp.where(mask[:, None], s, -jnp.inf)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e30)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bkhd->bqhd", (p / l).astype(v.dtype), v)
+
+
 def ssd_chunk_ref(x, dt, A, Bm, Cm):
     """Sequential (non-chunked) SSD recurrence — the exact semantics:
     h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ; y_t = C_t . h_t.

@@ -379,6 +379,39 @@ def attn_suffix(p, x, cfg: ArchConfig, ctx: ShardingCtx,
     return ctx.cs(out, "batch", "sp", None), k_new, v_new
 
 
+def attn_chunk_paged(p, x, cfg: ArchConfig, ctx: ShardingCtx,
+                     positions: jax.Array, k_pages: jax.Array,
+                     v_pages: jax.Array, layer, block_table: jax.Array,
+                     rows: jax.Array, offs: jax.Array, attend
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked-prefill attention against the PAGED KV arena.
+
+    x [B,C,D] one fixed-width chunk of prompt tokens per sequence;
+    positions [B,C] their absolute positions (pad rows repeat position 0);
+    k/v_pages the node arena plane; ``layer`` the model's stacked layer
+    index into the plane; block_table [B,W] plane-row indices; rows/offs
+    [B,C] the write coordinates of the chunk's tokens (pad columns point at
+    the null row). The chunk's (roped) K/V is scattered into its pages
+    before attention, then ``attend`` (the Pallas chunk kernel on TPU, the
+    jnp reference elsewhere) reads earlier chunks AND this chunk through
+    the block table under a causal mask on absolute positions. Returns
+    (output [B,C,D], k_pages, v_pages).
+    """
+    B, C = x.shape[0], x.shape[1]
+    H, hd = cfg.n_heads, cfg.head_dim_
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q, k_new, v_new = _project_qkv(p, h, h, cfg, cross=False)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    k_pages = k_pages.at[layer, rows, offs].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[layer, rows, offs].set(v_new.astype(v_pages.dtype))
+    kp = lax.dynamic_index_in_dim(k_pages, layer, 0, keepdims=False)
+    vp = lax.dynamic_index_in_dim(v_pages, layer, 0, keepdims=False)
+    o = attend(q, kp, vp, block_table, positions)            # [B, C, H, hd]
+    o = o.reshape(B, C, H * hd).astype(x.dtype)
+    return ctx.cs(o @ p["wo"], "batch", "sp", None), k_pages, v_pages
+
+
 # ---------------------------------------------------------------------------
 # FFN
 # ---------------------------------------------------------------------------

@@ -296,6 +296,59 @@ class Model:
         v_sfx = v_ys.transpose(1, 0, 2, 3, 4, 5).reshape((A * G,) + v_ys.shape[2:])
         return logits, k_sfx, v_sfx
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill shares the suffix-prefill eligibility rule: the
+        whole prompt context must live in paged self-attention KV, so only
+        pure causal self-attention stacks qualify (SSM/hybrid state is
+        positionally recurrent and cannot resume mid-prompt)."""
+        return self.supports_prefix_reuse
+
+    def prefill_chunk(self, params, k_pages, v_pages, tokens, positions,
+                      block_tables, rows, offs, last_idx, attend):
+        """One fixed-width prefill chunk per sequence, through the PAGED
+        arena.
+
+        tokens/positions [B,C]: a chunk of each prompt at its absolute
+        positions (pad columns repeat token/position 0 and scatter to the
+        null row); block_tables [B,W] plane-row indices; rows/offs [B,C]
+        write coordinates of the chunk tokens; last_idx [B] the in-chunk
+        index of each sequence's last real token (its logit row — only
+        meaningful for the chunk that completes a prompt). ``attend`` is the
+        chunked-prefill attention bound once at engine construction. The
+        fixed [B,C] shape is the recompile killer: every chunk of every
+        prompt length reuses one traced executable. Returns (last-token
+        logits [B,Vp] f32, k_pages, v_pages) — pages are donatable.
+        """
+        assert self.supports_chunked_prefill, self.cfg.name
+        cfg = self.cfg
+        bases, _, _, _, _ = self.paged_kv_layout()
+        x = self.embed(params, tokens)
+
+        def body(carry, inp):
+            x, kp, vp = carry
+            gp, g = inp
+            for i, (mixer, ffn, _) in enumerate(self.kinds):
+                sp = gp[f"slot{i}"]
+                o, kp, vp = L.attn_chunk_paged(
+                    sp["attn"], x, cfg, self.ctx, positions, kp, vp,
+                    bases[f"slot{i}"] + g, block_tables, rows, offs, attend)
+                x = x + o
+                if ffn == "dense":
+                    x = x + L.ffn_apply(sp["ffn"], x, cfg, self.ctx,
+                                        gelu=cfg.ffn_gelu)
+                elif ffn == "moe":
+                    x = x + MOE.moe_apply(sp["moe"], x, cfg, self.ctx)
+            return (x, kp, vp), None
+
+        (x, k_pages, v_pages), _ = flags.scan(
+            body, (x, k_pages, v_pages),
+            (params["groups"], jnp.arange(self.n_groups)))
+        x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+        last = x[jnp.arange(tokens.shape[0]), last_idx]
+        logits = (last @ self.unembed_weight(params)).astype(jnp.float32)
+        return logits, k_pages, v_pages
+
     # ---------------------------------------------------------------- decode
     def _group_decode(self, x, gp, gc, positions):
         cfg, ctx = self.cfg, self.ctx

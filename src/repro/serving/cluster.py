@@ -37,6 +37,11 @@ class NodeSpec:
     # bit-identical to pre-prefix-cache behavior)
     prefix_cache: bool = False
     prefix_cache_pages: int = 256
+    # engine iteration scheduler (0 = monolithic prefill, bit-identical to
+    # pre-chunking behavior; > 0 streams prompts in fixed-width chunks
+    # fused with decode, budgeted by max_batch_tokens per iteration)
+    max_batch_tokens: Optional[int] = None
+    prefill_chunk_tokens: int = 0
 
 
 @dataclasses.dataclass
@@ -81,6 +86,9 @@ def worker_specs(spec: ClusterSpec, seed: int = 1,
                        prefix_cache=ns.prefix_cache or None,
                        prefix_cache_pages=(ns.prefix_cache_pages
                                            if ns.prefix_cache else None),
+                       max_batch_tokens=ns.max_batch_tokens,
+                       prefill_chunk_tokens=(ns.prefill_chunk_tokens
+                                             or None),
                        xla_flags=worker_xla_flags)
             for nid, ns in enumerate(spec.nodes)]
 
@@ -130,7 +138,9 @@ def build_fleet(spec: Optional[ClusterSpec] = None,
                                  hbm_budget=ns.hbm_budget,
                                  max_slots=ns.max_slots, s_max=ns.s_max,
                                  prefix_cache=ns.prefix_cache,
-                                 prefix_cache_pages=ns.prefix_cache_pages))
+                                 prefix_cache_pages=ns.prefix_cache_pages,
+                                 max_batch_tokens=ns.max_batch_tokens,
+                                 prefill_chunk_tokens=ns.prefill_chunk_tokens))
     return fleet
 
 

@@ -2,10 +2,18 @@
 
 Iteration-level scheduling: each ``step()`` admits waiting requests into free
 slots (admission is prediction-guided through the Maestro accountant + rho
-margin — Eq. 3's R_need gates admission exactly as §III.C describes), runs
-prefill for newly admitted sequences, then one batched decode step for all
-active sequences. Preemption is boundary-only: requests are only evicted
-between engine steps, with their KV accounted and reclaimable.
+margin — Eq. 3's R_need gates admission exactly as §III.C describes), then
+assembles ONE fused iteration of at most ``max_batch_tokens``: every active
+decode sequence contributes its single next-token position, and sequences
+still prefilling contribute one fixed-width chunk of ``prefill_chunk_tokens``
+prompt tokens each, streamed into the arena page-by-page through
+``Model.prefill_chunk``. Prompts therefore never stall decode slots, slots
+join and leave at iteration granularity, and the fixed chunk shape means one
+traced executable serves every prompt length (no per-length recompiles).
+With ``prefill_chunk_tokens=0`` (the default) admission falls back to the
+original monolithic one-shot prefill, bit-identical to earlier revisions.
+Preemption is boundary-only: requests are only evicted between engine steps,
+with their KV accounted and reclaimable.
 
 KV layout: self-attention K/V lives in the node's PHYSICAL paged arena
 (:mod:`repro.serving.kv_arena`) — every pool page grant maps to one arena
@@ -19,9 +27,11 @@ run the dense decode path; their pool grants remain accounting-only.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional
+import time
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +40,7 @@ import numpy as np
 from repro.core.runtime.accounting import MemoryAccountant
 from repro.core.runtime.kv_pool import VirtualKVPool
 from repro.core.sched.margins import RhoEstimator
+from repro.kernels import chunk_prefill as _cp
 from repro.kernels import paged_attention as _pa
 from repro.kernels import ref as _ref
 from repro.models.transformer import Model
@@ -40,6 +51,13 @@ class PromptTooLongError(ValueError):
     """Prompt cannot fit the engine's sequence window (needs <= s_max - 1
     tokens so at least one decode position remains). Raised at ``submit``
     time — silent KV overflow is never possible."""
+
+
+class EngineStalledError(RuntimeError):
+    """``drain()`` exhausted its step budget with work still queued or
+    active — the engine made no terminal progress (e.g. a waiting request
+    whose reservation can never be granted). Raised instead of silently
+    returning a partial result set."""
 
 
 @dataclasses.dataclass
@@ -53,6 +71,8 @@ class Request:
     eos: Optional[int] = None
     truncated: bool = False               # finished early (KV exhausted)
     prefill_avoided: int = 0              # prompt tokens served from cache
+    submit_s: float = 0.0                 # wall stamp at engine submit
+    ttft_s: float = 0.0                   # wall submit -> first kept token
 
 
 class Engine:
@@ -60,7 +80,9 @@ class Engine:
                  max_slots: int = 4, s_max: int = 256,
                  page_tokens: int = 16, arena: Optional[KVArena] = None,
                  kv_backend: Optional[str] = None, prefix_cache=None,
-                 prefix_ns: Optional[str] = None):
+                 prefix_ns: Optional[str] = None,
+                 max_batch_tokens: Optional[int] = None,
+                 prefill_chunk_tokens: int = 0):
         """``arena``: the node-shared physical page store (a private one is
         created for standalone engines). ``kv_backend``: "pallas" | "ref" |
         "dense" — default picks the Pallas paged kernel on TPU and the jnp
@@ -72,7 +94,13 @@ class Engine:
         ``prefix_ns``: digest namespace for the prefix index — the fleet
         passes the SERVING model name here so gateway-side request digests
         (computed from the same name) match the node's advertised index;
-        defaults to the model config name for standalone engines."""
+        defaults to the model config name for standalone engines.
+        ``prefill_chunk_tokens``: > 0 switches prefill to fixed-width
+        chunks fused into the decode iteration (paged engines whose model
+        supports chunked prefill only; others keep monolithic prefill).
+        ``max_batch_tokens``: per-iteration token budget across decode
+        positions + prefill chunks (None = unbounded; at least one chunk
+        always advances so prefill cannot starve)."""
         self.model = model
         self.params = params
         self.acc = accountant
@@ -113,7 +141,7 @@ class Engine:
                 self._pc = self.arena.enable_prefix_cache(accountant, pc_cfg)
         self._hits: Dict[int, Any] = {}
         self.rho = RhoEstimator()
-        self.waiting: List[Request] = []
+        self.waiting: Deque[Request] = collections.deque()
         self.active: Dict[int, Request] = {}
         self.slot_of: Dict[int, int] = {}
         self.free_slots = list(range(max_slots))
@@ -133,6 +161,28 @@ class Engine:
                 donate_argnums=(1, 2, 3))
         else:
             self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self.max_batch_tokens = max_batch_tokens
+        self.chunk_tokens = (int(prefill_chunk_tokens)
+                             if (prefill_chunk_tokens and self.paged
+                                 and model.supports_chunked_prefill) else 0)
+        if self.chunk_tokens:
+            attend_c = (functools.partial(_cp.chunk_prefill_attention,
+                                          page_size=self.page_tokens)
+                        if kv_backend == "pallas"
+                        else _ref.chunk_prefill_attention_ref)
+            self._chunk_fwd = jax.jit(
+                functools.partial(model.prefill_chunk, attend=attend_c),
+                donate_argnums=(1, 2))
+        self._prefill_pos: Dict[int, int] = {}   # rid -> prompt tokens done
+        # iteration telemetry: distinct prefill forward shapes (the honest
+        # compile-count proxy — jit retraces exactly per new signature),
+        # prefill/decode token split, and fused-iteration counts
+        self._prefill_shapes: set = set()
+        self.prefill_compiles = 0
+        self.stat_prefill_tokens = 0
+        self.stat_decode_tokens = 0
+        self.stat_steps = 0
+        self.stat_fused_steps = 0
         self.finished: List[Request] = []
 
     # -------------------------------------------------------------- state
@@ -162,7 +212,8 @@ class Engine:
         must actually return its memory."""
         evicted = [req for rid in list(self.active)
                    if (req := self.evict(rid)) is not None]
-        self.waiting[:0] = evicted     # requeue ahead, original order kept
+        # requeue ahead of the waiting queue, original order kept
+        self.waiting.extendleft(reversed(evicted))
         self.binding.release_all()
         if self._pc is not None:       # slept models give back their pins
             self._pc.flush_model(self._pc_ns)
@@ -178,6 +229,8 @@ class Engine:
             raise PromptTooLongError(
                 f"prompt of {len(req.tokens)} tokens exceeds the engine "
                 f"window (s_max={self.s_max}, >=1 decode slot required)")
+        if not req.submit_s:
+            req.submit_s = time.perf_counter()
         self.waiting.append(req)
 
     def _r_need(self, req: Request) -> float:
@@ -213,7 +266,7 @@ class Engine:
                     if self.binding.make_private(req.req_id, len(hit.rows)):
                         self._pc.cow_copies += 1
                 self._hits[req.req_id] = hit
-            self.waiting.pop(0)
+            self.waiting.popleft()
             slot = self.free_slots.pop()
             self.slot_of[req.req_id] = slot
             self.active[req.req_id] = req
@@ -243,6 +296,19 @@ class Engine:
         return m
 
     # -------------------------------------------------------------- prefill
+    def _note_prefill_shape(self, sig) -> None:
+        """Count distinct prefill forward signatures — the compile-count
+        telemetry. jit retraces exactly once per new signature, so this is
+        the honest recompile proxy without reaching into jit internals."""
+        if sig not in self._prefill_shapes:
+            self._prefill_shapes.add(sig)
+            self.prefill_compiles += 1
+
+    def _first_token(self, req: Request, tok: int) -> None:
+        req.out.append(tok)
+        if not req.ttft_s and req.submit_s:
+            req.ttft_s = time.perf_counter() - req.submit_s
+
     def _prefill(self, req: Request) -> None:
         self._ensure_cache()
         slot = self.slot_of[req.req_id]
@@ -255,11 +321,26 @@ class Engine:
             digs = (hit.digests if hit is not None else None)
             self._index_prompt(req, digs)
 
+    def _begin_chunked(self, req: Request) -> None:
+        """Register a newly admitted request with the chunked-prefill plan:
+        its prompt streams into the arena ``chunk_tokens`` at a time across
+        the next iterations (cache-hit prefixes are skipped — the matched
+        pages are already aliased into this sequence's block table, so the
+        first chunk starts right after them)."""
+        hit = self._hits.get(req.req_id)
+        p0 = hit.tokens_matched if hit is not None else 0
+        self._prefill_pos[req.req_id] = p0
+        if p0:
+            req.prefill_avoided = p0
+            self._pc.tokens_avoided += p0
+
     def _prefill_full(self, req: Request, slot: int) -> None:
         toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
         logits, cache = self.model.prefill(self.params, toks,
                                            req.extras or {})
         P = len(req.tokens)
+        self._note_prefill_shape(("full", P))
+        self.stat_prefill_tokens += P
         if self.paged:
             # [G,1,P,Hkv,hd] per slot -> layer-stacked [L,P,Hkv,hd] in
             # plane layout order (slot base + group)
@@ -288,7 +369,7 @@ class Engine:
                 else:
                     self.cache[name][kname] = write_state(tgt, arr)
         self.positions[slot] = P
-        req.out.append(int(jnp.argmax(logits[0])))
+        self._first_token(req, int(jnp.argmax(logits[0])))
 
     def _prefill_suffix(self, req: Request, hit, slot: int) -> None:
         """Cache-hit prefill: gather matched prefix KV from the arena rows
@@ -305,11 +386,13 @@ class Engine:
         pk = plane.k[:L, idx].reshape((L, n_pages * page) + tail)[:, :M]
         pv = plane.v[:L, idx].reshape((L, n_pages * page) + tail)[:, :M]
         toks = jnp.asarray(req.tokens[M:], jnp.int32)[None, :]
+        self._note_prefill_shape(("suffix", len(req.tokens) - M, M))
+        self.stat_prefill_tokens += len(req.tokens) - M
         logits, k_sfx, v_sfx = self.model.prefill_suffix(
             self.params, toks, pk, pv)
         self.binding.write_prompt_at(req.req_id, k_sfx[:, 0], v_sfx[:, 0], M)
         self.positions[slot] = len(req.tokens)
-        req.out.append(int(jnp.argmax(logits[0])))
+        self._first_token(req, int(jnp.argmax(logits[0])))
         req.prefill_avoided = M
         self._pc.tokens_avoided += M
 
@@ -329,34 +412,115 @@ class Engine:
                             n_prefix_tokens=(i + 1) * page)
             parent = d
 
+    def _prefill_chunk_batch(self, rids: List[int]) -> None:
+        """One fused chunk forward for the given mid-prefill sequences: each
+        contributes the next ``chunk_tokens`` of its prompt at fixed shape
+        [max_slots, C]. Slots not advancing this iteration (idle, decoding,
+        or budget-deferred) are padding — their tokens/positions are zero and
+        their write coordinates point at the plane's null row, so the forward
+        is shape-stable and their garbage rows are discarded. A sequence
+        whose chunk reaches the end of its prompt gets its first output
+        token from that chunk's last-row logits and joins decode at the NEXT
+        iteration (join-at-iteration-granularity)."""
+        self._ensure_cache()
+        C = self.chunk_tokens
+        page = self.page_tokens
+        toks = np.zeros((self.max_slots, C), np.int32)
+        pos = np.zeros((self.max_slots, C), np.int32)
+        rows = np.zeros((self.max_slots, C), np.int32)
+        offs = np.zeros((self.max_slots, C), np.int32)
+        bt = np.zeros((self.max_slots, self.binding.bt_width), np.int32)
+        last_idx = np.zeros(self.max_slots, np.int32)
+        for rid in rids:
+            req = self.active[rid]
+            slot = self.slot_of[rid]
+            p0 = self._prefill_pos[rid]
+            n = min(C, len(req.tokens) - p0)
+            table = self.binding.row_table(rid)
+            bt[slot] = table
+            abs_t = np.arange(p0, p0 + n)
+            toks[slot, :n] = req.tokens[p0:p0 + n]
+            pos[slot, :n] = abs_t
+            rows[slot, :n] = table[abs_t // page]
+            offs[slot, :n] = abs_t % page
+            last_idx[slot] = n - 1
+            self._prefill_pos[rid] = p0 + n
+            self.stat_prefill_tokens += n
+        self._note_prefill_shape(("chunk", C))
+        plane = self.binding.plane
+        logits, plane.k, plane.v = self._chunk_fwd(
+            self.params, plane.k, plane.v, jnp.asarray(toks),
+            jnp.asarray(pos), jnp.asarray(bt), jnp.asarray(rows),
+            jnp.asarray(offs), jnp.asarray(last_idx))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for rid in rids:
+            req = self.active[rid]
+            if self._prefill_pos[rid] < len(req.tokens):
+                continue                       # more chunks to stream
+            del self._prefill_pos[rid]
+            slot = self.slot_of[rid]
+            self.positions[slot] = len(req.tokens)
+            self._first_token(req, int(nxt[slot]))
+            if self._pc is not None:
+                hit = self._hits.pop(rid, None)
+                self._index_prompt(req, hit.digests if hit is not None
+                                   else None)
+
     # --------------------------------------------------------------- decode
     def step(self) -> List[Request]:
-        """One engine iteration; returns requests finished this step."""
+        """One fused engine iteration; returns the requests that finished
+        DURING THIS CALL only (the accumulated history stays on
+        ``self.finished`` for owners that drain it wholesale)."""
+        n0 = len(self.finished)
+        self.stat_steps += 1
         for req in self._admit():
-            self._prefill(req)
-        if self.active and self.paged:
+            if self.chunk_tokens:
+                self._begin_chunked(req)
+            else:
+                self._prefill(req)
+        # sequences still streaming their prompt join decode at the NEXT
+        # iteration after their final chunk — snapshot the decode set first
+        decode_rids = [rid for rid in self.active
+                       if rid not in self._prefill_pos]
+        if decode_rids and self.paged:
             # grow page coverage for this step's token writes; a sequence
             # the pool cannot extend finishes truncated (honest
             # backpressure instead of silent overflow)
-            for rid in list(self.active):
+            for rid in list(decode_rids):
                 pos = int(self.positions[self.slot_of[rid]])
                 if not self.binding.ensure_tokens(rid, pos + 1):
                     self.active[rid].truncated = True
                     self._release(rid)
-        if self.active:
+                    decode_rids.remove(rid)
+        if self._prefill_pos:
+            # token-budget split: decode contributes one position per
+            # sequence, the remainder admits whole prefill chunks; at least
+            # one chunk always advances (prefill cannot starve)
+            if self.max_batch_tokens is None:
+                n_adv = len(self._prefill_pos)
+            else:
+                room = self.max_batch_tokens - len(decode_rids)
+                n_adv = max(room // self.chunk_tokens, 1)
+            advance = list(self._prefill_pos)[:n_adv]
+            self._prefill_chunk_batch(advance)
+            if decode_rids:
+                self.stat_fused_steps += 1
+        if decode_rids:
             self._ensure_cache()
             toks = np.zeros((self.max_slots, 1), np.int32)
-            for rid, req in self.active.items():
-                toks[self.slot_of[rid], 0] = req.out[-1]
+            for rid in decode_rids:
+                toks[self.slot_of[rid], 0] = self.active[rid].out[-1]
             if self.paged:
-                logits = self._decode_paged(toks)
+                logits = self._decode_paged(toks, decode_rids)
             else:
                 logits, self.cache = self._decode(
                     self.params, self.cache, jnp.asarray(toks),
                     jnp.asarray(self.positions))
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            self.stat_decode_tokens += len(decode_rids)
             done = []
-            for rid, req in list(self.active.items()):
+            for rid in decode_rids:
+                req = self.active[rid]
                 slot = self.slot_of[rid]
                 tok = int(nxt[slot])
                 req.out.append(tok)
@@ -367,17 +531,18 @@ class Engine:
                     done.append(rid)
             for rid in done:
                 self._release(rid)
-        return [r for r in self.finished]
+        return self.finished[n0:]
 
-    def _decode_paged(self, toks: np.ndarray):
+    def _decode_paged(self, toks: np.ndarray, decode_rids: List[int]):
         """One paged decode step: build block tables / write coordinates for
-        the active slots and run the arena-backed decode. Idle slots point at
-        the plane's null row (reads and writes land there harmlessly)."""
+        the decoding slots and run the arena-backed decode. Idle and
+        mid-prefill slots point at the plane's null row (reads and writes
+        land there harmlessly)."""
         bt = np.zeros((self.max_slots, self.binding.bt_width), np.int32)
         seq_lens = np.ones(self.max_slots, np.int32)
         rows = np.zeros(self.max_slots, np.int32)
         offs = np.zeros(self.max_slots, np.int32)
-        for rid in self.active:
+        for rid in decode_rids:
             slot = self.slot_of[rid]
             pos = int(self.positions[slot])
             if self._pc is not None and self.binding.make_private(
@@ -413,7 +578,8 @@ class Engine:
         """Withdraw a request still waiting for admission (no KV held)."""
         for i, r in enumerate(self.waiting):
             if r.req_id == req_id:
-                return self.waiting.pop(i)
+                del self.waiting[i]
+                return r
         return None
 
     def evict(self, req_id: int) -> Optional[Request]:
@@ -428,15 +594,25 @@ class Engine:
         slot = self.slot_of.pop(req_id)
         self._needs.pop(req_id, None)
         self._hits.pop(req_id, None)
+        # mid-chunked-prefill eviction: drop the streaming cursor too — the
+        # partially-written pages go back with free_seq below, and a later
+        # re-admission restarts the prompt from scratch
+        self._prefill_pos.pop(req_id, None)
         self.binding.free_seq(req_id)
         self.free_slots.append(slot)
         self.positions[slot] = 0
         req.out.clear()
+        req.ttft_s = 0.0            # the discarded first token doesn't count
         return req
 
     def drain(self, max_steps: int = 10_000) -> List[Request]:
-        while (self.waiting or self.active) and max_steps:
+        steps = max_steps
+        while (self.waiting or self.active) and steps:
             self.step()
-            max_steps -= 1
+            steps -= 1
+        if self.waiting or self.active:
+            raise EngineStalledError(
+                f"drain({max_steps}) exhausted with {len(self.waiting)} "
+                f"waiting / {len(self.active)} active requests still held")
         out, self.finished = self.finished, []
         return out

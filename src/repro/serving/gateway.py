@@ -572,6 +572,12 @@ class ClusterGateway:
                               for k in pkeys}
             for k in ("pages_aliased", "cow_copies"):
                 m.prefix_stats[k] = float(sum(s.get(k, 0) for s in stats))
+        # engine iteration-scheduler counters, summed fleet-wide (older
+        # kv_stats snapshots may lack them — remote workers predate the keys)
+        for k in ("engine_prefill_tokens", "engine_decode_tokens",
+                  "engine_prefill_compiles", "engine_fused_steps",
+                  "engine_steps"):
+            setattr(m, k, int(sum(s.get(k, 0) for s in stats)))
         m.truncated_stages = self._truncated
         m.node_backend = self.node_backend
         m.clock = self.clock.name
@@ -956,6 +962,7 @@ class ClusterGateway:
         ev.finish_t, ev.out_len = max(now, 1e-9), len(req.out)
         ev.prompt_tokens = len(req.tokens)
         ev.prefill_avoided = int(getattr(req, "prefill_avoided", 0))
+        ev.ttft_s = float(getattr(req, "ttft_s", 0.0))
         # Calibrate on the SAME basis the prediction used (the uncapped
         # trace-scale lengths): the realized output, mapped back through the
         # live decode budget, against L_hat. Comparing live capped bytes to

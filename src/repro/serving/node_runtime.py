@@ -36,7 +36,9 @@ class NodeRuntime:
                  hbm_budget: float = 2e9, max_slots: int = 4,
                  s_max: int = 256, ctx_bytes: int = 8 << 20,
                  page_tokens: int = 16, prefix_cache: bool = False,
-                 prefix_cache_pages: int = 256):
+                 prefix_cache_pages: int = 256,
+                 max_batch_tokens: Optional[int] = None,
+                 prefill_chunk_tokens: int = 0):
         self.node_id = node_id
         self.cluster_id = cluster_id
         self.zoo = zoo
@@ -54,6 +56,10 @@ class NodeRuntime:
         self.ctx_bytes = ctx_bytes
         self.max_slots = max_slots
         self.s_max = s_max
+        # engine iteration-scheduler knobs (chunked prefill / token budget),
+        # forwarded to every colocated engine at activation
+        self.max_batch_tokens = max_batch_tokens
+        self.prefill_chunk_tokens = prefill_chunk_tokens
         profiles = {
             name: ModelProfile(
                 name=name, weight_bytes=_tree_bytes(host_params[name]),
@@ -103,7 +109,9 @@ class NodeRuntime:
                 self.zoo[name], self.device_params[name], self.acc,
                 max_slots=self.max_slots, s_max=self.s_max,
                 arena=self.arena, prefix_cache=self.prefix_cfg,
-                prefix_ns=name)
+                prefix_ns=name,
+                max_batch_tokens=self.max_batch_tokens,
+                prefill_chunk_tokens=self.prefill_chunk_tokens)
         else:
             self.engines[name].params = self.device_params[name]
         return time.perf_counter() - t0
@@ -261,7 +269,18 @@ class NodeRuntime:
                "arena_peak_pages": int(self.arena.peak_mapped_pages),
                "arena_utilization": float(self.arena.utilization()),
                "pages_aliased": int(self.arena.pages_aliased),
-               "cow_copies": int(self.arena.cow_copies)}
+               "cow_copies": int(self.arena.cow_copies),
+               # iteration-scheduler telemetry, summed over engines
+               "engine_prefill_tokens": sum(
+                   e.stat_prefill_tokens for e in self.engines.values()),
+               "engine_decode_tokens": sum(
+                   e.stat_decode_tokens for e in self.engines.values()),
+               "engine_prefill_compiles": sum(
+                   e.prefill_compiles for e in self.engines.values()),
+               "engine_fused_steps": sum(
+                   e.stat_fused_steps for e in self.engines.values()),
+               "engine_steps": sum(
+                   e.stat_steps for e in self.engines.values())}
         if self.arena.prefix_index is not None:
             out.update(self.arena.prefix_index.stats())
         return out

@@ -49,6 +49,8 @@ class StageEvent:
     out_len: int = 0
     prompt_tokens: int = 0        # live prompt length the engine prefetched
     prefill_avoided: int = 0      # prompt tokens served from the prefix cache
+    ttft_s: float = 0.0           # engine-measured wall submit -> first token
+                                  # (0.0 when the engine didn't stamp one)
     preemptions: int = 0          # times this stage was evicted + requeued
     rejections: int = 0           # routing/admission failures observed
     prior_wait_s: float = 0.0     # wait accrued by attempts aborted by
@@ -138,6 +140,19 @@ class GatewayMetrics:
     prefill_tokens_total: int = 0
     prefill_tokens_avoided: int = 0
     prefix_stats: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # engine iteration scheduler (chunked prefill / continuous batching):
+    # wall-measured TTFT percentiles over finished stages (engine submit ->
+    # first output token; 0.0 when no stage carried a stamp — virtual-clock
+    # parity suites exclude these, like the other wall-side counters) and
+    # the fleet-summed per-iteration token split + compile/fusion counters
+    # (deterministic: identical across node backends under either clock)
+    ttft_p50_s: float = 0.0
+    ttft_p95_s: float = 0.0
+    engine_prefill_tokens: int = 0
+    engine_decode_tokens: int = 0
+    engine_prefill_compiles: int = 0
+    engine_fused_steps: int = 0
+    engine_steps: int = 0
     # transport + membership plane (PR 7): worker deaths witnessed this
     # run, the in-flight stages evacuated back to the ready queue because
     # of them, end-of-run liveness state per node, idle-ping misses, nodes
@@ -229,6 +244,7 @@ class Telemetry:
 
         qdel = [e.queue_delay_s for e in finished]
         slat = [e.finish_t - e.ready_t for e in finished]
+        ttft = [e.ttft_s for e in finished if e.ttft_s > 0]
         inf = float("inf")
         return GatewayMetrics(
             policy=policy,
@@ -243,6 +259,8 @@ class Telemetry:
             stage_latency_p95_s=pct(slat, 95, 0.0),
             stage_latency_p99_s=pct(slat, 99, 0.0),
             stage_latency_p999_s=pct(slat, 99.9, 0.0),
+            ttft_p50_s=pct(ttft, 50, 0.0),
+            ttft_p95_s=pct(ttft, 95, 0.0),
             prefill_tokens_total=sum(e.prompt_tokens for e in finished),
             prefill_tokens_avoided=sum(e.prefill_avoided for e in finished),
             interactive_queue_delay_s=(float(np.mean(int_delays))

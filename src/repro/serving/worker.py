@@ -99,6 +99,11 @@ class WorkerSpec:
     page_tokens: Optional[int] = None
     prefix_cache: Optional[bool] = None
     prefix_cache_pages: Optional[int] = None
+    # engine iteration-scheduler knobs (None = NodeRuntime defaults):
+    # max_batch_tokens caps decode positions + prefill chunk tokens per
+    # fused iteration; prefill_chunk_tokens > 0 enables chunked prefill
+    max_batch_tokens: Optional[int] = None
+    prefill_chunk_tokens: Optional[int] = None
     seed: int = 1
     # extra XLA_FLAGS applied inside the child BEFORE its XLA client forms
     # (e.g. "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1"
@@ -138,7 +143,10 @@ def _worker_main(conn, spec: WorkerSpec) -> None:
                                 ("page_tokens", spec.page_tokens),
                                 ("prefix_cache", spec.prefix_cache),
                                 ("prefix_cache_pages",
-                                 spec.prefix_cache_pages))
+                                 spec.prefix_cache_pages),
+                                ("max_batch_tokens", spec.max_batch_tokens),
+                                ("prefill_chunk_tokens",
+                                 spec.prefill_chunk_tokens))
               if v is not None}
         node = NodeRuntime(spec.node_id, spec.cluster_id, zoo, host, **kw)
         conn.send(("ready", {"profiles": node.profiles,

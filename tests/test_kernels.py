@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
+from repro.kernels.chunk_prefill import chunk_prefill_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.paged_attention import paged_attention
 from repro.kernels.ssd_chunk import ssd_chunk
@@ -61,6 +62,48 @@ def test_paged_attention_sweep(B, H, Hkv, hd, page, slots, dtype):
     exp = ref.paged_attention_ref(q, kp, vp, bt, seq_lens)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,C,H,Hkv,hd,page,slots", [
+    (2, 4, 4, 2, 8, 4, 4),       # GQA 2x, chunk spans pages
+    (3, 8, 6, 2, 16, 8, 3),      # GQA 3x
+    (1, 16, 2, 2, 32, 16, 2),    # MHA, chunk == page
+    (2, 8, 8, 1, 64, 4, 6),      # MQA, chunk 2x page
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chunk_prefill_attention_sweep(B, C, H, Hkv, hd, page, slots, dtype):
+    """Chunked-prefill attention vs the jnp oracle: each sequence's chunk
+    sits at a random absolute offset into its pages (earlier chunks below,
+    causal within), exactly the mid-prompt state the engine drives."""
+    n_pages = B * slots + 3
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, C, H, hd), dtype)
+    kp = jax.random.normal(ks[1], (n_pages, page, Hkv, hd), dtype)
+    vp = jax.random.normal(ks[2], (n_pages, page, Hkv, hd), dtype)
+    bt = jax.random.permutation(ks[3], n_pages)[:B * slots] \
+        .reshape(B, slots).astype(jnp.int32)
+    p0 = jax.random.randint(ks[4], (B,), 0, slots * page - C + 1)
+    pos = (p0[:, None] + jnp.arange(C)[None, :]).astype(jnp.int32)
+    out = chunk_prefill_attention(q, kp, vp, bt, pos, page_size=page,
+                                  interpret=True)
+    exp = ref.chunk_prefill_attention_ref(q, kp, vp, bt, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_chunk_prefill_pad_rows_are_finite():
+    """Pad rows (position repeated at 0) must produce finite garbage, not
+    NaN — the engine discards them but NaN would poison donated pages."""
+    B, C, H, Hkv, hd, page, slots = 2, 4, 4, 2, 8, 4, 3
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, C, H, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (10, page, Hkv, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (10, page, Hkv, hd), jnp.float32)
+    bt = jnp.ones((B, slots), jnp.int32)
+    pos = jnp.zeros((B, C), jnp.int32)        # all-pad sequences
+    out = chunk_prefill_attention(q, kp, vp, bt, pos, page_size=page,
+                                  interpret=True)
+    assert bool(jnp.all(jnp.isfinite(out)))
 
 
 @pytest.mark.parametrize("B,S,H,P,N,chunk", [

@@ -22,11 +22,13 @@ RTT = np.array([[0.001, 0.04], [0.04, 0.001]])
 ZOO_NAMES = ("qwen3-8b",)
 
 # GatewayMetrics fields that legitimately differ between backends: the
-# backend tag itself, the wall-clock/IPC accounting of the workers, and
-# the socket transport's byte counters (zero on pipe backends)
+# backend tag itself, the wall-clock/IPC accounting of the workers, the
+# socket transport's byte counters (zero on pipe backends), and the
+# engine-measured wall TTFT percentiles (real elapsed time, not virtual)
 BACKEND_ONLY = {"node_backend", "ipc_calls", "ipc_wall_s",
                 "worker_step_wall_s", "worker_stats",
-                "rpc_bytes_sent", "rpc_bytes_recv"}
+                "rpc_bytes_sent", "rpc_bytes_recv",
+                "ttft_p50_s", "ttft_p95_s"}
 
 
 def _run(backend, make_jobs, specs, policy="fcfs", predictor=None):
