@@ -37,7 +37,7 @@ def _register(mode: str, backend: str = "inproc",
               clock: str = "virtual") -> None:
     from benchmarks import (activation, colocation, engine_batching, fitness,
                             gateway, kernels, memory, prediction, preemption,
-                            prefix_reuse, scheduling)
+                            prefix_reuse, scheduling, tail_scenarios)
     fast = mode != "full"
     smoke = mode == "smoke"
     if clock == "wall":
@@ -68,6 +68,12 @@ def _register(mode: str, backend: str = "inproc",
             repeats=1 if smoke else 2,
             backend=backend,
             assert_speedup=not smoke),
+        "tail_scenarios": lambda: tail_scenarios.main(
+            n_jobs={"full": 1000, "fast": 150, "smoke": 30}[mode],
+            fault_jobs={"full": 48, "fast": 24, "smoke": 10}[mode],
+            policies=SMOKE_POLICIES if smoke else None,
+            clock=clock,
+            max_run_s={"full": 1800.0, "fast": 900.0, "smoke": 300.0}[mode]),
         "prefix_reuse": lambda: prefix_reuse.main(
             n_jobs={"full": 96, "fast": 24, "smoke": 10}[mode], fast=fast,
             backend=backend, include_wall=(mode == "full")),

@@ -1,0 +1,261 @@
+"""Tail-metric scenario suite: heavy-tail traffic + deterministic faults.
+
+Sweeps scheduling policies over the named ``TAIL_SCENARIOS`` workload
+families (diurnal sinusoid, Markov-modulated bursty overload, heavy-tailed
+Zipf demand across the FULL 10-config zoo — vision, MoE, SSM and whisper
+included) on the live gateway under the deterministic virtual clock, and
+reports the tail columns the paper's contention claims live in: p99/p99.9
+end-to-end latency and queue delay, SLO attainment under overload, and
+per-model-family utilization. A fault leg replays one scenario with a
+scripted :class:`~repro.serving.faultplan.FaultPlan` — kill a node, degrade
+a cross-cluster link, restore it — and asserts the run completes on the
+survivors with every in-flight stage finished exactly once, reporting
+recovery-time-after-fault.
+
+Persisted by ``benchmarks.run`` as ``BENCH_tail_scenarios.json``; the
+``--clock wall`` variant (``BENCH_tail_scenarios_wall.json``) runs the
+fault leg on a real socket worker fleet — an actual SIGKILL mid-run plus a
+replacement node registered through the plan — so recovery is exercised
+end-to-end through the transport + membership plane, not just the
+in-process death path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+from benchmarks.common import banner, get_predictor
+from repro.configs import get_config, list_configs
+from repro.core.sched.policies import POLICIES
+from repro.data.tracegen import TAIL_SCENARIOS, scenario_workload
+from repro.serving.cluster import (ClusterSpec, NodeSpec, build_fleet,
+                                   build_zoo, jobs_from_trace, worker_specs)
+from repro.serving.faultplan import (DegradeLink, FaultPlan, KillWorker,
+                                     RegisterNode, RestoreLink)
+from repro.serving.gateway import ClusterGateway, GatewayConfig
+from repro.serving.worker import close_fleet
+
+FULL_ZOO = tuple(sorted(list_configs()))          # all ten model families
+FAMILY = {name: get_config(name).family for name in FULL_ZOO}
+
+
+def _spec() -> ClusterSpec:
+    # 4 nodes over 3 clusters carrying the ENTIRE config zoo; chunked
+    # prefill keeps the per-prompt-length retrace cost off the hot loop
+    # for the attention families (SSM/encoder models keep monolithic
+    # prefill by construction)
+    node = dict(max_slots=4, hbm_budget=2.5e9, prefill_chunk_tokens=8)
+    return ClusterSpec(nodes=(NodeSpec(0, **node), NodeSpec(0, **node),
+                              NodeSpec(1, **node), NodeSpec(2, **node)),
+                       model_names=FULL_ZOO)
+
+
+def _family_util(m) -> Dict[str, Dict[str, int]]:
+    """Fold per-model telemetry into per-family served stages/tokens."""
+    stages: Dict[str, int] = {}
+    tokens: Dict[str, int] = {}
+    for name, n in m.stages_by_model.items():
+        fam = FAMILY.get(name, "other")
+        stages[fam] = stages.get(fam, 0) + n
+        tokens[fam] = tokens.get(fam, 0) + m.tokens_by_model.get(name, 0)
+    return {"stages": stages, "tokens": tokens}
+
+
+def _run(spec, trace, policy, pred, backend="inproc", clock="virtual",
+         zoo=None, host=None, fault_plan=None, seed=0, gen_cap=6,
+         max_run_s=None, heartbeat_s=0.25, suspect_after_s=1.0,
+         dead_after_s=5.0) -> Dict:
+    fleet = build_fleet(spec, zoo=zoo, host=host, backend=backend)
+    jobs = jobs_from_trace(trace, n_clusters=spec.rtt_s.shape[0], seed=seed,
+                           prompt_cap=8, gen_cap=gen_cap)
+    t0 = time.time()
+    try:
+        gw = ClusterGateway(fleet, spec.rtt_s, predictor=pred,
+                            policy=policy,
+                            cfg=GatewayConfig(node_backend=backend,
+                                              clock=clock,
+                                              heartbeat_s=heartbeat_s,
+                                              suspect_after_s=suspect_after_s,
+                                              dead_after_s=dead_after_s,
+                                              max_run_s=max_run_s))
+        if clock == "wall":
+            gw.warmup()
+        m = gw.run(jobs, fault_plan=fault_plan)
+        finished_events = sum(1 for e in gw.telemetry.events.values()
+                              if e.finish_t > 0)
+    finally:
+        close_fleet(fleet)
+    total = sum(len(j.stages) for j in trace)
+    row = m.row()
+    row["wall_s"] = round(time.time() - t0, 1)
+    row["total_stages"] = total
+    row["finished_events"] = finished_events
+    row["family_utilization"] = _family_util(m)
+    if fault_plan is not None:
+        row["fault_log"] = [[round(t, 3), what]
+                            for t, what in fault_plan.fired]
+    return row
+
+
+def main(n_jobs: int = 1000, fault_jobs: int = 48, seed: int = 5,
+         policies: Optional[Sequence[str]] = None,
+         scenarios: Optional[Sequence[str]] = None,
+         rate_scale: float = 1.0, clock: str = "virtual",
+         max_run_s: float = 900.0) -> Dict:
+    banner(f"tail-scenarios: heavy-tail traffic x faults ({n_jobs} jobs, "
+           f"full {len(FULL_ZOO)}-model zoo, clock={clock})")
+    scenarios = tuple(scenarios) if scenarios else tuple(TAIL_SCENARIOS)
+    policies = tuple(policies) if policies else ("fcfs", "least-loaded",
+                                                 "maestro")
+    pred = (get_predictor(n_jobs=800, fast=True)
+            if any(POLICIES[p].needs_predictor for p in policies) else None)
+    spec = _spec()
+    zoo, host = build_zoo(spec.model_names)
+    rows: List[Dict] = []
+
+    if clock == "wall":
+        # wall mode is the e2e fault leg only: a REAL socket worker fleet,
+        # a real SIGKILL scheduled on the clock plane, a link degradation,
+        # and a replacement worker registered mid-run by the plan —
+        # recovery through transport EOF / heartbeats, not a shortcut.
+        # Wall rows assert completion + exactly-once, never latency. The
+        # zoo is trimmed to small dense configs: this leg measures the
+        # transport + membership plane, not model coverage (the virtual
+        # fault leg keeps the full zoo), and each socket child pays its
+        # own cold-compile per model it serves.
+        wall_zoo = ("qwen3-8b", "starcoder2-15b")
+        wall_spec = ClusterSpec(nodes=spec.nodes, rtt_s=spec.rtt_s,
+                                model_names=wall_zoo)
+        row = _fault_leg(wall_spec, fault_jobs, seed, rate_scale,
+                         backend="socket", clock="wall",
+                         max_run_s=max_run_s, rows=rows)
+        return {
+            "clock": "wall",
+            "backend": "socket",
+            "n_jobs": fault_jobs,
+            "zoo": list(wall_zoo),
+            "scenario": "heavy-tail-zoo",
+            "recovery_time_s": row["recovery_time_s"],
+            "rows": rows,
+        }
+
+    # ---- scenario x policy sweep (virtual clock, deterministic) ----
+    for scenario in scenarios:
+        trace = scenario_workload(scenario, n_jobs, seed=seed,
+                                  rate_scale=rate_scale)
+        for policy in policies:
+            row = _run(spec, trace, policy, pred, zoo=zoo, host=host,
+                       seed=seed)
+            row["scenario"] = scenario
+            rows.append(row)
+            assert row["finished_jobs"] > 0, \
+                f"{scenario}/{policy}: no jobs finished"
+            assert row["finished_events"] == row["finished_stages"], \
+                f"{scenario}/{policy}: duplicate stage completions"
+            fams = set(row["family_utilization"]["stages"])
+            print(f"[tail] {scenario:>16}/{policy:<12} "
+                  f"slo={row['slo_attainment']:.2f} "
+                  f"p99={row['p99_latency_s']:.1f}s "
+                  f"p99.9={row['p999_latency_s']:.1f}s "
+                  f"qd_p99={row['queue_delay_p99_s']:.1f}s "
+                  f"fin={row['finished_jobs']}/{n_jobs} "
+                  f"families={len(fams)} ({row['wall_s']:.0f}s wall)")
+        # heavy-tail demand must actually reach the whole zoo: every model
+        # family served at least one stage in every scenario
+        served = set()
+        for r in rows:
+            if r["scenario"] == scenario:
+                served |= set(r["family_utilization"]["stages"])
+        assert served == set(FAMILY.values()), \
+            f"{scenario}: families missing traffic: " \
+            f"{set(FAMILY.values()) - served}"
+
+    # ---- deterministic fault leg (virtual clock, in-process fleet) ----
+    fault_row = _fault_leg(spec, fault_jobs, seed, rate_scale,
+                           backend="inproc", clock="virtual",
+                           zoo=zoo, host=host, rows=rows)
+
+    return {
+        "n_jobs": n_jobs,
+        "fault_jobs": fault_jobs,
+        "seed": seed,
+        "rate_scale": rate_scale,
+        "nodes": len(spec.nodes),
+        "clusters": spec.n_clusters,
+        "zoo": list(FULL_ZOO),
+        "scenarios": list(scenarios),
+        "policies": list(policies),
+        "recovery_time_s": fault_row["recovery_time_s"],
+        "rows": rows,
+    }
+
+
+def _fault_leg(spec: ClusterSpec, fault_jobs: int, seed: int,
+               rate_scale: float, backend: str, clock: str,
+               zoo=None, host=None, max_run_s: Optional[float] = None,
+               rows: Optional[List[Dict]] = None) -> Dict:
+    """One scripted-fault run on the heavy-tail-zoo scenario: node 0 dies
+    a third of the way in, the cluster-0<->1 link degrades 25x shortly
+    after and recovers later; on the socket backend a replacement worker
+    also boots mid-run. Asserts completion on the survivors with every
+    stage finished exactly once."""
+    trace = scenario_workload("heavy-tail-zoo", fault_jobs, seed=seed,
+                              rate_scale=rate_scale)
+    span = max(j.arrival_s for j in trace)
+    events = [KillWorker(at_s=span * 0.33, node_id=0),
+              DegradeLink(at_s=span * 0.4, src_cluster=0, dst_cluster=1,
+                          factor=25.0),
+              RestoreLink(at_s=span * 0.8, src_cluster=0, dst_cluster=1)]
+    if backend == "socket":
+        # replacement worker: same zoo, joins cluster 0 under a fresh id
+        # (booted by the plan when the event fires, like an autoscaler)
+        grown = ClusterSpec(nodes=spec.nodes + (spec.nodes[0],),
+                            rtt_s=spec.rtt_s,
+                            model_names=spec.model_names)
+        wspec = worker_specs(grown)[-1]
+
+        def boot_replacement():
+            from repro.serving.worker import spawn_fleet
+            return spawn_fleet([wspec], backend="socket")[0]
+
+        events.append(RegisterNode(at_s=span * 0.5,
+                                   factory=boot_replacement))
+    plan = FaultPlan(events)
+    # wall: generous death threshold — socket children cold-compile each
+    # model they serve, and a busy child can't answer pings mid-compile
+    row = _run(spec, trace, "least-loaded", None, backend=backend,
+               clock=clock, zoo=zoo, host=host, fault_plan=plan, seed=seed,
+               max_run_s=max_run_s,
+               heartbeat_s=0.05 if clock == "wall" else 0.25,
+               suspect_after_s=5.0 if clock == "wall" else 1.0,
+               dead_after_s=30.0 if clock == "wall" else 5.0)
+    row["scenario"] = "heavy-tail-zoo+faults"
+    if rows is not None:
+        rows.append(row)
+    total = row["total_stages"]
+    assert row["run_outcome"] == "completed", \
+        f"fault leg did not complete: {row['run_outcome']}"
+    assert row["node_deaths"] == 1, \
+        f"expected exactly one death, got {row['node_deaths']}"
+    # exactly-once: every stage of the trace finished, each with a single
+    # telemetry completion — evacuation requeued, never duplicated
+    assert row["finished_stages"] == total \
+        and row["finished_events"] == total, \
+        f"exactly-once violated: {row['finished_stages']}/" \
+        f"{row['finished_events']} of {total}"
+    if row["requeued_stages"] > 0:
+        assert row["recovery_time_s"] > 0.0
+    fired = [what for _, what in plan.fired]
+    assert any(w.startswith("kill node 0") for w in fired), fired
+    if backend == "socket":
+        assert any(w.startswith("register node") for w in fired), fired
+    print(f"[tail] fault leg ({backend}/{clock}): "
+          f"deaths={row['node_deaths']} requeued={row['requeued_stages']} "
+          f"recovery={row['recovery_time_s']:.2f}s "
+          f"fin={row['finished_stages']}/{total} stages exactly once "
+          f"({row['wall_s']:.0f}s wall)")
+    return row
+
+
+if __name__ == "__main__":
+    main(n_jobs=60, fault_jobs=24)

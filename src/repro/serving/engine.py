@@ -47,6 +47,26 @@ from repro.models.transformer import Model
 from repro.serving.kv_arena import KVArena
 
 
+def _model_jit(model: "Model", key: tuple, builder):
+    """Per-``Model`` cache of the engine's jitted callables.
+
+    Engines are ephemeral — activation churn (sleep/wake under Alg. 2),
+    per-policy fleet rebuilds and multi-node zoos construct them by the
+    dozen against the same handful of shared ``Model`` objects. A fresh
+    ``jax.jit`` wrapper per engine forfeits the XLA compile cache, so a
+    10-model fleet recompiled identical programs on every activation;
+    keying the wrapper on the model (plus everything the traced program
+    closes over: kernel backend, page size) makes compilation once-per-
+    program for the model's whole lifetime."""
+    cache = getattr(model, "_engine_jit_cache", None)
+    if cache is None:
+        cache = model._engine_jit_cache = {}
+    fn = cache.get(key)
+    if fn is None:
+        fn = cache[key] = builder()
+    return fn
+
+
 class PromptTooLongError(ValueError):
     """Prompt cannot fit the engine's sequence window (needs <= s_max - 1
     tokens so at least one decode position remains). Raised at ``submit``
@@ -156,11 +176,18 @@ class Engine:
                                         page_size=self.page_tokens)
                       if kv_backend == "pallas"
                       else _ref.paged_attention_ref)
-            self._decode = jax.jit(
-                functools.partial(model.decode_step_paged, attend=attend),
-                donate_argnums=(1, 2, 3))
+            self._decode = _model_jit(
+                model, ("decode_paged", kv_backend, self.page_tokens),
+                lambda: jax.jit(
+                    functools.partial(model.decode_step_paged,
+                                      attend=attend),
+                    donate_argnums=(1, 2, 3)))
         else:
-            self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+            self._decode = _model_jit(
+                model, ("decode_dense",),
+                lambda: jax.jit(model.decode_step, donate_argnums=(1,)))
+        self._prefill_fwd = _model_jit(model, ("prefill",),
+                                       lambda: jax.jit(model.prefill))
         self.max_batch_tokens = max_batch_tokens
         self.chunk_tokens = (int(prefill_chunk_tokens)
                              if (prefill_chunk_tokens and self.paged
@@ -170,10 +197,20 @@ class Engine:
                                           page_size=self.page_tokens)
                         if kv_backend == "pallas"
                         else _ref.chunk_prefill_attention_ref)
-            self._chunk_fwd = jax.jit(
-                functools.partial(model.prefill_chunk, attend=attend_c),
-                donate_argnums=(1, 2))
+            self._chunk_fwd = _model_jit(
+                model, ("chunk", kv_backend, self.page_tokens),
+                lambda: jax.jit(
+                    functools.partial(model.prefill_chunk, attend=attend_c),
+                    donate_argnums=(1, 2)))
         self._prefill_pos: Dict[int, int] = {}   # rid -> prompt tokens done
+        # stubbed modality frontends (§IV prototype): encoder-decoder and
+        # cross-attention models prefill against precomputed frame / patch
+        # embeddings. A request that arrives without them (the text-only
+        # gateway plane) gets this engine-constant deterministic stub, so
+        # every family of the zoo — whisper and vision included — can be
+        # activated and served without shipping modality tensors over the
+        # worker transport.
+        self._modal_extras = self._make_modal_extras()
         # iteration telemetry: distinct prefill forward shapes (the honest
         # compile-count proxy — jit retraces exactly per new signature),
         # prefill/decode token split, and fused-iteration counts
@@ -334,10 +371,27 @@ class Engine:
             req.prefill_avoided = p0
             self._pc.tokens_avoided += p0
 
+    def _make_modal_extras(self) -> Optional[Dict[str, Any]]:
+        """Deterministic stub inputs for the model's modality frontend
+        (None for text-only models): whisper-style frames [1,F,D] or VLM
+        patch embeddings [1,N,C], seeded once per engine so repeated runs
+        are bit-identical."""
+        cfg = self.model.cfg
+        key = jax.random.PRNGKey(0)
+        if cfg.encoder is not None:
+            return {"frames": jax.random.normal(
+                key, (1, cfg.encoder.n_frames, cfg.d_model), cfg.dtype)}
+        if cfg.cross_attn is not None and cfg.family == "vlm":
+            cd = cfg.cross_attn.ctx_dim or cfg.d_model
+            return {"ctx_embeds": jax.random.normal(
+                key, (1, cfg.cross_attn.n_ctx_tokens, cd), cfg.dtype)}
+        return None
+
     def _prefill_full(self, req: Request, slot: int) -> None:
         toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
-        logits, cache = self.model.prefill(self.params, toks,
-                                           req.extras or {})
+        logits, cache = self._prefill_fwd(self.params, toks,
+                                          req.extras
+                                          or self._modal_extras or {})
         P = len(req.tokens)
         self._note_prefill_shape(("full", P))
         self.stat_prefill_tokens += P
@@ -388,7 +442,9 @@ class Engine:
         toks = jnp.asarray(req.tokens[M:], jnp.int32)[None, :]
         self._note_prefill_shape(("suffix", len(req.tokens) - M, M))
         self.stat_prefill_tokens += len(req.tokens) - M
-        logits, k_sfx, v_sfx = self.model.prefill_suffix(
+        logits, k_sfx, v_sfx = _model_jit(
+            self.model, ("prefill_suffix",),
+            lambda: jax.jit(self.model.prefill_suffix))(
             self.params, toks, pk, pv)
         self.binding.write_prompt_at(req.req_id, k_sfx[:, 0], v_sfx[:, 0], M)
         self.positions[slot] = len(req.tokens)

@@ -192,6 +192,8 @@ class ClusterGateway:
             if is_worker_fleet else self.cfg.node_backend)
         self.fleet: Dict[int, NodeRuntime] = {n.node_id: n for n in fleet}
         self.rtt_s = validate_rtt(rtt_s)
+        # pristine copy for restore_link after fault-injected degradation
+        self._nominal_rtt = self.rtt_s.copy()
         self.profiles = {name: p
                          for name, p in next(iter(self.fleet.values()))
                          .profiles.items()}
@@ -239,6 +241,7 @@ class ClusterGateway:
             nid: getattr(n, "ipc_calls", 0)
             for nid, n in self.fleet.items()}
         self._last_busy: Dict[int, float] = {nid: 0.0 for nid in self.fleet}
+        self._last_sweep_t: Optional[float] = None
         self._requeued_stages = 0
         # dead/retired handles kept for end-of-run counter harvesting +
         # close(); their node ids have already left self.fleet
@@ -510,19 +513,27 @@ class ClusterGateway:
 
     def run(self, jobs: Sequence[LiveJob],
             max_ticks: Optional[int] = None,
-            max_run_s: Optional[float] = None) -> GatewayMetrics:
+            max_run_s: Optional[float] = None,
+            fault_plan=None) -> GatewayMetrics:
         """Serve ``jobs`` to completion or until the run deadline.
 
         The deadline comes from (first match wins) the deprecated
         ``max_ticks`` argument (virtual ticks), the ``max_run_s`` argument,
         ``GatewayConfig.max_run_s``, or — virtual clock only — the
         workload-derived safety cap. A deadline that fires is reported as a
-        typed ``RunDeadlineExceeded`` in the returned metrics."""
+        typed ``RunDeadlineExceeded`` in the returned metrics.
+
+        ``fault_plan`` (a ``repro.serving.faultplan.FaultPlan``, duck-typed
+        via its ``arm``) schedules mid-run events — worker kills, link
+        degradation, replacement nodes — on this gateway's clock; arming
+        happens after the clock restart so event times are run-relative."""
         self.submit_jobs(jobs)
         self._run_wall0 = time.perf_counter()
         # serving time starts NOW: pre-run work (e.g. warmup) is not billed
         # to the measured window (no-op on the virtual clock)
         self.clock.restart()
+        if fault_plan is not None:
+            fault_plan.arm(self)
         if max_run_s is None:
             max_run_s = self.cfg.max_run_s
         if max_ticks is not None:
@@ -893,8 +904,14 @@ class ClusterGateway:
     def _fire_releases(self, now: float) -> None:
         """Submit every stage whose transit event released. Stale events
         (the stage was preempted or re-dispatched while in transit, so a
-        different record — or none — is in flight) are dropped."""
+        different record — or none — is in flight) are dropped. Callable
+        payloads (fault-plan events armed via ``clock.call_at``) run here,
+        at the same clock boundary as transit releases, so injected faults
+        land at deterministic virtual times."""
         for rec in self.clock.pop_due():
+            if callable(rec):
+                rec(now)
+                continue
             if self.inflight.get(rec.stage.stage_id) is not rec \
                     or rec.submitted:
                 continue
@@ -996,7 +1013,19 @@ class ClusterGateway:
         visibly dead processes, fold piggybacked heartbeats (any reply
         consumed since the last sweep proves the worker alive), ping nodes
         that were silent, feed step-wall deltas to the straggler detector,
-        and age the liveness state machine."""
+        and age the liveness state machine.
+
+        Stall amnesty: if the GATEWAY itself paused longer than a sweep
+        period (a replacement worker booting inside a fault-plan event, a
+        long jit compile, a GC-style hiccup), worker silence over that gap
+        proves nothing — the gateway wasn't listening. Nodes that still
+        look alive at the transport level get a free beat before aging, so
+        a local pause never wipes a healthy fleet."""
+        stalled = (self._last_sweep_t is not None
+                   and now - self._last_sweep_t
+                   > max(self.cfg.suspect_after_s,
+                         2.0 * self.cfg.heartbeat_s))
+        self._last_sweep_t = now
         for nid, node in list(self.fleet.items()):
             proc = getattr(node, "proc", None)
             if proc is not None and not proc.is_alive():
@@ -1007,6 +1036,8 @@ class ClusterGateway:
             calls = getattr(node, "ipc_calls", 0)
             if calls > self._last_traffic.get(nid, 0):
                 self.registry.beat(nid, now)   # replies ARE heartbeats
+            elif stalled:
+                self.registry.beat(nid, now)   # our pause, not its silence
             elif hasattr(node, "ping_send"):
                 try:
                     node.ping_send()           # idle-period probe
@@ -1101,6 +1132,26 @@ class ClusterGateway:
                 and hasattr(node, "set_continuous")):
             node.set_continuous(True)
         return nid
+
+    def degrade_link(self, src_cluster: int, dst_cluster: int,
+                     factor: float) -> None:
+        """Fault injection: inflate the RTT of one cross-cluster link by
+        ``factor`` (both directions — links fail symmetrically). Stages
+        already in transit keep their old release times; everything
+        dispatched after this sees the degraded link."""
+        if factor <= 0:
+            raise ValueError(f"factor must be > 0, got {factor}")
+        s = src_cluster % self.rtt_s.shape[0]
+        d = dst_cluster % self.rtt_s.shape[0]
+        self.rtt_s[s, d] = self._nominal_rtt[s, d] * factor
+        self.rtt_s[d, s] = self._nominal_rtt[d, s] * factor
+
+    def restore_link(self, src_cluster: int, dst_cluster: int) -> None:
+        """Undo ``degrade_link``: the link returns to its nominal RTT."""
+        s = src_cluster % self.rtt_s.shape[0]
+        d = dst_cluster % self.rtt_s.shape[0]
+        self.rtt_s[s, d] = self._nominal_rtt[s, d]
+        self.rtt_s[d, s] = self._nominal_rtt[d, s]
 
     def retire_node(self, nid: int) -> List[int]:
         """Mid-run elasticity: gracefully drain a node. Its in-flight

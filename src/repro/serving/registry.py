@@ -76,6 +76,11 @@ class MemberRecord:
     suspect_cause: str = ""
     died_t: Optional[float] = None
     death_cause: str = ""
+    #: how many members have held this node id (1 = original; each
+    #: re-registration after a death — a replacement worker reusing the
+    #: id — increments it, so fault-injection suites can tell a rejoined
+    #: fleet from one that never broke)
+    generation: int = 1
 
 
 class FleetRegistry:
@@ -91,13 +96,21 @@ class FleetRegistry:
         #: node ids in death order (a node re-registered after dying — a
         #: replacement reusing the id — can appear more than once)
         self.deaths: List[int] = []
+        #: post-death re-registrations (replacement workers), in join order
+        self.rejoins: List[int] = []
 
     # ---------------------------------------------------------- membership
     def register(self, node_id: int, now: float) -> MemberRecord:
         """Admit a node (fleet construction or mid-run elasticity). A dead
         member's id may be re-registered — that is reconnect: a replacement
-        worker joining under the same node id."""
+        worker joining under the same node id, tracked as a new generation
+        of the member."""
+        prev = self.members.get(node_id)
         rec = MemberRecord(node_id=node_id, joined_t=now, last_beat_t=now)
+        if prev is not None:
+            rec.generation = prev.generation + 1
+            if prev.state == DEAD:
+                self.rejoins.append(node_id)
         self.members[node_id] = rec
         return rec
 

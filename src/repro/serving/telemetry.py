@@ -122,12 +122,14 @@ class GatewayMetrics:
     node_busy_frac: Dict[int, float] = dataclasses.field(
         default_factory=dict)
     overlap_factor: float = 0.0
-    # tail percentiles alongside the p95 column: end-to-end job latency
-    # (inf when no job finished, like p95_latency_s), per-stage queue delay
-    # and per-stage service latency (ready -> finish; 0.0 when no stage
-    # finished)
-    p99_latency_s: float = float("inf")
-    p999_latency_s: float = float("inf")
+    # tail percentiles alongside the p95 column: end-to-end job latency,
+    # per-stage queue delay and per-stage service latency (ready -> finish).
+    # Tail columns (p99/p99.9) are 0.0 on empty or single-sample runs — an
+    # extreme-percentile estimate from < 2 observations is noise, and the
+    # fleet-summed benchmark paths must never see NaN/inf in a tail cell
+    # (see tail_percentile)
+    p99_latency_s: float = 0.0
+    p999_latency_s: float = 0.0
     queue_delay_p95_s: float = 0.0
     queue_delay_p99_s: float = 0.0
     queue_delay_p999_s: float = 0.0
@@ -168,9 +170,28 @@ class GatewayMetrics:
     straggler_nodes: List[int] = dataclasses.field(default_factory=list)
     rpc_bytes_sent: int = 0
     rpc_bytes_recv: int = 0
+    # fault-injection / tail-scenario plane (PR 9): how long the fleet took
+    # to finish the last stage evacuated by a node death (max over deaths of
+    # death time -> final requeued-stage finish; 0.0 when no death requeued
+    # work or nothing requeued finished), plus per-model demand served —
+    # finished stages and generated tokens keyed by resolved model name
+    # (the per-family utilization columns in BENCH_tail_scenarios.json)
+    recovery_time_s: float = 0.0
+    stages_by_model: Dict[str, int] = dataclasses.field(default_factory=dict)
+    tokens_by_model: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def row(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
+
+
+def tail_percentile(xs: List[float], q: float) -> float:
+    """Extreme-tail percentile (p99/p99.9) with defined edge cases: fewer
+    than two samples returns 0.0 — ``np.percentile`` of an empty array is
+    NaN (and would raise on a bare empty list), and a "tail" read off a
+    single observation is noise that poisons fleet-summed columns."""
+    if len(xs) < 2:
+        return 0.0
+    return float(np.percentile(xs, q))
 
 
 class Telemetry:
@@ -246,19 +267,35 @@ class Telemetry:
         slat = [e.finish_t - e.ready_t for e in finished]
         ttft = [e.ttft_s for e in finished if e.ttft_s > 0]
         inf = float("inf")
+        recovery: List[float] = []
+        for d in self.node_deaths:
+            fins = [self.events[s].finish_t for s in d.requeued_stages
+                    if s in self.events and self.events[s].finish_t > 0]
+            if fins:
+                recovery.append(max(fins) - d.t)
+        stages_by_model: Dict[str, int] = {}
+        tokens_by_model: Dict[str, int] = {}
+        for e in finished:
+            if e.model:
+                stages_by_model[e.model] = stages_by_model.get(e.model, 0) + 1
+                tokens_by_model[e.model] = (tokens_by_model.get(e.model, 0)
+                                            + e.out_len)
         return GatewayMetrics(
             policy=policy,
             slo_attainment=float(np.mean(slo_ok)) if slo_ok else 0.0,
             mean_latency_s=float(np.mean(lat)) if lat else float("inf"),
             p95_latency_s=pct(lat, 95, inf),
-            p99_latency_s=pct(lat, 99, inf),
-            p999_latency_s=pct(lat, 99.9, inf),
+            p99_latency_s=tail_percentile(lat, 99),
+            p999_latency_s=tail_percentile(lat, 99.9),
             queue_delay_p95_s=pct(qdel, 95, 0.0),
-            queue_delay_p99_s=pct(qdel, 99, 0.0),
-            queue_delay_p999_s=pct(qdel, 99.9, 0.0),
+            queue_delay_p99_s=tail_percentile(qdel, 99),
+            queue_delay_p999_s=tail_percentile(qdel, 99.9),
             stage_latency_p95_s=pct(slat, 95, 0.0),
-            stage_latency_p99_s=pct(slat, 99, 0.0),
-            stage_latency_p999_s=pct(slat, 99.9, 0.0),
+            stage_latency_p99_s=tail_percentile(slat, 99),
+            stage_latency_p999_s=tail_percentile(slat, 99.9),
+            recovery_time_s=max(recovery, default=0.0),
+            stages_by_model=stages_by_model,
+            tokens_by_model=tokens_by_model,
             ttft_p50_s=pct(ttft, 50, 0.0),
             ttft_p95_s=pct(ttft, 95, 0.0),
             prefill_tokens_total=sum(e.prompt_tokens for e in finished),

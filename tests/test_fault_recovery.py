@@ -1,7 +1,9 @@
 """Fault recovery e2e: SIGKILL one socket worker mid-run under the wall
 clock and prove the membership plane absorbs it — the dead node's in-flight
 stages re-enter the ready queue, the run completes on the survivor, the
-death is typed telemetry, and nothing hangs or double-completes."""
+death is typed telemetry, and nothing hangs or double-completes. The
+FaultPlan tests drive the same recovery machinery from a scripted schedule
+(clock-plane events) instead of a hand-rolled step loop."""
 import os
 import signal
 
@@ -10,6 +12,8 @@ import numpy as np
 from repro.data.tracegen import generate_trace
 from repro.serving.cluster import (ClusterSpec, NodeSpec, build_fleet,
                                    jobs_from_trace)
+from repro.serving.faultplan import (DegradeLink, FaultPlan, KillWorker,
+                                     RestoreLink)
 from repro.serving.gateway import ClusterGateway, GatewayConfig
 
 RTT = np.array([[0.001, 0.04], [0.04, 0.001]])
@@ -66,3 +70,116 @@ def test_kill_worker_mid_run_requeues_and_completes():
     finally:
         gw.close()
         gw.close()                       # close is idempotent post-death
+
+
+def test_faultplan_scripted_kill_and_link_degradation_socket():
+    """Scripted plan on the socket backend under the wall clock: the victim
+    worker is SIGKILLed at a scheduled time while a cross-cluster link is
+    degraded — the run must complete on the survivor with every stage
+    finished exactly once, typed death telemetry, and a bounded recovery
+    time."""
+    deadline_s = 180.0
+    spec = ClusterSpec(nodes=(NodeSpec(0), NodeSpec(1)),
+                       model_names=("qwen3-8b",))
+    jobs = jobs_from_trace(generate_trace(n_jobs=8, seed=3, rate=6.0),
+                           n_clusters=2, gen_cap=12)
+    fleet = build_fleet(spec, backend="socket")
+    gw = ClusterGateway(fleet, RTT, policy="fcfs",
+                        cfg=GatewayConfig(node_backend="socket",
+                                          clock="wall", heartbeat_s=0.05,
+                                          max_run_s=deadline_s))
+    victim = fleet[0].node_id
+    # anchor the schedule to the trace's arrival span: the run cannot drain
+    # before the last arrival, so every event is guaranteed to fire
+    span = max(j.arrival_s for j in jobs)
+    plan = FaultPlan([
+        KillWorker(at_s=0.6 * span, node_id=victim),
+        DegradeLink(at_s=0.2 * span, src_cluster=0, dst_cluster=1,
+                    factor=20.0),
+        RestoreLink(at_s=span, src_cluster=0, dst_cluster=1),
+    ])
+    try:
+        gw.warmup()
+        m = gw.run(jobs, fault_plan=plan)
+        total = sum(len(j.stages) for j in jobs)
+
+        # every scripted event fired, in schedule order
+        assert [w.split(":")[0] for _, w in plan.fired] == \
+            ["degrade link 0<->1 x20", f"kill node {victim}",
+             "restore link 0<->1"]
+        # the degraded link really was restored before the run ended
+        assert np.allclose(gw.rtt_s, RTT)
+
+        # exactly-once completion on the survivors
+        assert m.run_outcome == "completed"
+        assert m.finished_jobs == len(jobs)
+        assert m.finished_stages == total
+        fins = [e for e in gw.telemetry.events.values() if e.finish_t > 0]
+        assert len(fins) == total
+
+        # typed death + bounded recovery: everything the death evacuated
+        # was re-served (on a survivor) well inside the run deadline
+        assert m.node_deaths == 1
+        (death,) = m.death_events
+        assert death.node_id == victim
+        assert m.liveness[victim] == "dead"
+        for sid in death.requeued_stages:
+            ev = gw.telemetry.events[sid]
+            assert ev.finish_t > 0 and ev.node_id != victim
+        if death.requeued_stages:
+            assert 0.0 < m.recovery_time_s < deadline_s
+    finally:
+        gw.close()
+
+
+def test_faultplan_virtual_inproc_deterministic():
+    """The same plan on the in-process fleet under the virtual clock is
+    fully deterministic: two runs produce identical completion sets and
+    identical injected-fault times."""
+    spec = ClusterSpec(nodes=(NodeSpec(0), NodeSpec(1)),
+                       model_names=("qwen3-8b",))
+    trace = generate_trace(n_jobs=6, seed=3, rate=4.0)
+
+    def one_run():
+        fleet = build_fleet(spec)
+        jobs = jobs_from_trace(trace, n_clusters=2, gen_cap=8)
+        plan = FaultPlan([
+            KillWorker(at_s=0.6, node_id=0),
+            DegradeLink(at_s=0.7, src_cluster=0, dst_cluster=1,
+                        factor=30.0),
+        ])
+        gw = ClusterGateway(fleet, RTT.copy(), policy="fcfs")
+        m = gw.run(jobs, fault_plan=plan)
+        events = {sid: (e.node_id, e.out_len, e.finish_t)
+                  for sid, e in gw.telemetry.events.items()
+                  if e.finish_t > 0}
+        gw.close()
+        return m, events, plan.fired
+
+    m1, ev1, fired1 = one_run()
+    m2, ev2, fired2 = one_run()
+    total = sum(len(j.stages) for j in trace)
+    assert ev1 == ev2 and fired1 == fired2
+    assert m1.node_deaths == 1 and m1.finished_stages == total
+    assert len(ev1) == total
+    assert m1.makespan_s == m2.makespan_s
+    assert m1.recovery_time_s == m2.recovery_time_s
+
+
+def test_faultplan_single_use():
+    plan = FaultPlan([KillWorker(at_s=1.0, node_id=0)])
+
+    class _Clock:
+        def now(self):
+            return 0.0
+
+        def call_at(self, t, payload):
+            pass
+
+    class _GW:
+        clock = _Clock()
+
+    plan.arm(_GW())
+    import pytest
+    with pytest.raises(RuntimeError):
+        plan.arm(_GW())

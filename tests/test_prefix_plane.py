@@ -152,10 +152,12 @@ def test_telemetry_tail_percentiles():
         float(np.percentile([0.01 * i + 1.0 for i in range(100)], 95)))
     assert m.prefill_tokens_total == 100 * 100
     assert m.prefill_tokens_avoided == 100 * 40
-    # empty run: inf job-latency tails, zero stage tails (p95 convention)
+    # empty run: every tail column is exactly 0.0 (p95 job latency keeps
+    # its historical inf-on-empty convention; p99/p99.9 must never emit
+    # NaN/inf into fleet-summed benchmark payloads)
     e = Telemetry().summary("x", [], {}, 10.0, 0.0)
-    assert e.p99_latency_s == float("inf") \
-        and e.p999_latency_s == float("inf")
+    assert e.p95_latency_s == float("inf")
+    assert e.p99_latency_s == 0.0 and e.p999_latency_s == 0.0
     assert e.stage_latency_p999_s == 0.0 and e.queue_delay_p999_s == 0.0
 
 

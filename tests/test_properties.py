@@ -22,6 +22,8 @@ from repro.core.runtime.kv_pool import VirtualKVPool     # noqa: E402
 from repro.core.runtime.residency import (               # noqa: E402
     HierarchicalResidency, ModelState)
 from repro.core.sched.fitness import RobustNormalizer    # noqa: E402
+from repro.data.tracegen import (                        # noqa: E402
+    DiurnalArrivals, MarkovModulatedArrivals, PoissonArrivals)
 
 PROFILES = {f"m{i}": synthetic_profile(f"m{i}", params_b=0.5 + i)
             for i in range(6)}
@@ -157,3 +159,53 @@ def test_robust_normalizer_bounds(history, query):
         n.observe("m", v)
     out = n.norm("m", query)
     assert 0.0 <= out <= 1.0
+
+
+# ------------------------------------------------------------- tracegen
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.1, 50.0),
+       st.integers(1, 300))
+def test_poisson_interarrivals_nonnegative(seed, rate, n):
+    ts = PoissonArrivals(rate=rate).sample(np.random.default_rng(seed), n)
+    assert ts.shape == (n,)
+    assert ts[0] > 0 and np.all(np.diff(ts) >= 0)
+    assert np.all(np.isfinite(ts))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.5, 20.0))
+def test_poisson_mean_rate_converges(seed, rate):
+    n = 4000
+    ts = PoissonArrivals(rate=rate).sample(np.random.default_rng(seed), n)
+    # empirical rate over a 4000-sample window is within 15% of nominal
+    assert abs(n / ts[-1] - rate) < 0.15 * rate
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.floats(0.2, 2.0), st.floats(2.5, 20.0), st.floats(10.0, 300.0))
+def test_diurnal_arrivals_properties(seed, base, peak, period):
+    d = DiurnalArrivals(base_rate=base, peak_rate=peak, period_s=period)
+    ts = d.sample(np.random.default_rng(seed), 200)
+    assert ts[0] > 0 and np.all(np.diff(ts) >= 0)
+    # the instantaneous rate profile stays inside [base, peak] everywhere
+    grid = np.linspace(0.0, 3.0 * period, 512)
+    rates = np.array([d.rate_at(t) for t in grid])
+    assert np.all(rates >= base - 1e-9) and np.all(rates <= peak + 1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_mmpp_burst_phase_occupancy(seed):
+    mm = MarkovModulatedArrivals(rates=(0.5, 12.0), dwell_s=(30.0, 8.0))
+    times, phases = mm.sample_with_phases(
+        np.random.default_rng(seed), 3000)
+    assert times[0] > 0 and np.all(np.diff(times) >= 0)
+    assert set(np.unique(phases)) == {0, 1}
+    # expected share of arrivals per phase is (rate_k * dwell_k) / sum;
+    # with 3000 arrivals the observed share lands within a generous band
+    w = np.array(mm.rates) * np.array(mm.dwell_s)
+    expect = w / w.sum()
+    share1 = float(np.mean(phases == 1))
+    assert 0.0 < share1 < 1.0
+    assert abs(share1 - expect[1]) < 0.25

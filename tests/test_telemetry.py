@@ -1,0 +1,94 @@
+"""Percentile edge cases + fault/tail columns in the telemetry plane.
+
+The fleet-summed benchmark paths serialize ``GatewayMetrics.row()`` straight
+into BENCH JSON: a NaN (np.percentile of an empty array) or an IndexError
+on a single-sample run would poison every downstream comparison, so the
+extreme-tail columns (p99/p99.9) are pinned to 0.0 below two samples."""
+import math
+import types
+
+import pytest
+
+from repro.serving.telemetry import (NodeDeathEvent, Telemetry,
+                                     tail_percentile)
+
+
+def _job(i, stage_ids, interactive=True, arrival=0.0, deadline=10.0):
+    return types.SimpleNamespace(
+        job_id=i, interactive=interactive, arrival_s=arrival,
+        deadline_s=deadline,
+        stages=[types.SimpleNamespace(stage_id=s) for s in stage_ids])
+
+
+def test_tail_percentile_edge_cases():
+    assert tail_percentile([], 99) == 0.0
+    assert tail_percentile([], 99.9) == 0.0
+    assert tail_percentile([3.5], 99) == 0.0          # single sample: noise
+    assert tail_percentile([1.0, 2.0], 50) == pytest.approx(1.5)
+    xs = [float(i) for i in range(1000)]
+    assert tail_percentile(xs, 99.9) > tail_percentile(xs, 99)
+    assert not math.isnan(tail_percentile([], 99))
+
+
+def test_summary_empty_run_has_no_nan():
+    m = Telemetry().summary("x", [], {}, 10.0, 0.0)
+    assert m.p99_latency_s == 0.0 and m.p999_latency_s == 0.0
+    assert m.queue_delay_p99_s == 0.0 and m.queue_delay_p999_s == 0.0
+    assert m.stage_latency_p99_s == 0.0 and m.stage_latency_p999_s == 0.0
+    assert m.recovery_time_s == 0.0
+    assert m.stages_by_model == {} and m.tokens_by_model == {}
+    # nothing in the whole row is NaN (json.dumps would emit invalid JSON)
+    for k, v in m.row().items():
+        if isinstance(v, float):
+            assert not math.isnan(v), k
+
+
+def test_summary_single_sample_run():
+    t = Telemetry()
+    ev = t.event(0, 0, True)
+    ev.ready_t, ev.dispatch_t, ev.start_t, ev.finish_t = 0.0, 0.1, 0.1, 1.0
+    m = t.summary("x", [_job(0, [0])], {0: 1.0}, 10.0, 1.0)
+    # p95 keeps the observation; the extreme tails refuse to extrapolate
+    assert m.p95_latency_s == pytest.approx(1.0)
+    assert m.p99_latency_s == 0.0 and m.p999_latency_s == 0.0
+    assert m.queue_delay_p999_s == 0.0 and m.stage_latency_p999_s == 0.0
+
+
+def test_summary_fleet_tails_monotone():
+    t = Telemetry()
+    jobs, finish = [], {}
+    for i in range(200):
+        ev = t.event(i, i, True)
+        ev.ready_t, ev.dispatch_t = 0.0, 0.002 * i
+        ev.start_t, ev.finish_t = 0.002 * i, 0.002 * i + 1.0
+        jobs.append(_job(i, [i]))
+        finish[i] = ev.finish_t
+    m = t.summary("x", jobs, finish, 10.0, 2.0)
+    assert m.p95_latency_s <= m.p99_latency_s <= m.p999_latency_s
+    assert m.queue_delay_p95_s <= m.queue_delay_p99_s \
+        <= m.queue_delay_p999_s
+    assert m.stage_latency_p95_s <= m.stage_latency_p99_s \
+        <= m.stage_latency_p999_s
+
+
+def test_recovery_time_from_death_events():
+    t = Telemetry()
+    for sid, fin in ((0, 4.0), (1, 6.5), (2, 2.0)):
+        ev = t.event(sid, sid, False)
+        ev.ready_t, ev.finish_t = 0.0, fin
+        ev.model = "qwen3-8b" if sid < 2 else "whisper-medium"
+        ev.out_len = 10 * (sid + 1)
+    # death at t=3 evacuated stages 0 and 1; the last one landed at 6.5
+    t.node_death(NodeDeathEvent(node_id=0, t=3.0, cause="test",
+                                requeued_stages=(0, 1)))
+    jobs = [_job(i, [i], interactive=False, deadline=100.0)
+            for i in range(3)]
+    m = t.summary("x", jobs, {0: 4.0, 1: 6.5, 2: 2.0}, 10.0, 7.0)
+    assert m.recovery_time_s == pytest.approx(3.5)
+    assert m.stages_by_model == {"qwen3-8b": 2, "whisper-medium": 1}
+    assert m.tokens_by_model == {"qwen3-8b": 30, "whisper-medium": 30}
+    # a death whose evacuated stages never finished contributes nothing
+    t2 = Telemetry()
+    t2.node_death(NodeDeathEvent(node_id=1, t=1.0, cause="test",
+                                 requeued_stages=(7,)))
+    assert t2.summary("x", [], {}, 10.0, 2.0).recovery_time_s == 0.0

@@ -1,0 +1,158 @@
+"""Deterministic-workload suite for the production-traffic generator.
+
+Two contracts: (1) every new arrival process / demand / length distribution
+is byte-reproducible — the same seed yields a byte-identical trace, hashed
+over every field of every job and stage; (2) the legacy generators are
+FROZEN — ``generate_trace``/``generate_team_trace`` outputs for existing
+seeds are pinned by golden fingerprints, so no tracegen growth can ever
+silently shift the traces the sim/gateway benchmarks and calibration
+suites are built on."""
+import numpy as np
+import pytest
+
+from repro.data.tracegen import (ARRIVALS, DEMANDS, LENGTHS, TAIL_SCENARIOS,
+                                 DiurnalArrivals, MarkovModulatedArrivals,
+                                 ParetoLengths, PoissonArrivals, ZipfDemand,
+                                 generate_team_trace, generate_trace,
+                                 generate_workload, make_arrival,
+                                 scenario_workload, workload_fingerprint)
+
+# golden fingerprints of the LEGACY generators at in-use seeds (test_sim,
+# benchmarks/common.get_trace, calibration suites). If one of these moves,
+# a change altered existing traces — that is a regression, not a refresh.
+LEGACY_GOLDEN = {
+    ("trace", 64, 0): "7b5d13aa608a24ddff804898334c9938",
+    ("trace", 48, 13): "2a59de01bae5fba85d7522d8809b353d",
+    ("team", 24, 0): "4b62ed5b23751f2da10bf93471f4d8b3",
+    ("team", 16, 5): "837f9027ff527bb587e795c95b57183a",
+}
+
+
+def test_legacy_generate_trace_is_frozen():
+    assert workload_fingerprint(generate_trace(64, seed=0)) \
+        == LEGACY_GOLDEN[("trace", 64, 0)]
+    assert workload_fingerprint(
+        generate_trace(48, rate=2.0, batch_ratio=0.6, seed=13)) \
+        == LEGACY_GOLDEN[("trace", 48, 13)]
+
+
+def test_legacy_generate_team_trace_is_frozen():
+    assert workload_fingerprint(generate_team_trace(24, seed=0)) \
+        == LEGACY_GOLDEN[("team", 24, 0)]
+    assert workload_fingerprint(
+        generate_team_trace(16, seed=5, n_teams=2)) \
+        == LEGACY_GOLDEN[("team", 16, 5)]
+
+
+@pytest.mark.parametrize("arrival", [
+    "poisson",
+    ("poisson", dict(rate=3.0)),
+    ("diurnal", dict(base_rate=0.5, peak_rate=5.0, period_s=60.0)),
+    ("mmpp", dict(rates=(0.5, 8.0), dwell_s=(20.0, 5.0))),
+])
+@pytest.mark.parametrize("demand", [None, ("zipf", dict(alpha=1.2)),
+                                    "uniform"])
+def test_same_seed_byte_identical(arrival, demand):
+    a = generate_workload(40, arrival=arrival, demand=demand,
+                          lengths="pareto", seed=7)
+    b = generate_workload(40, arrival=arrival, demand=demand,
+                          lengths="pareto", seed=7)
+    assert workload_fingerprint(a) == workload_fingerprint(b)
+    # and a different seed actually changes the trace
+    c = generate_workload(40, arrival=arrival, demand=demand,
+                          lengths="pareto", seed=8)
+    assert workload_fingerprint(a) != workload_fingerprint(c)
+
+
+def test_arrivals_sorted_and_positive():
+    for spec in ("poisson", ("diurnal", {}), ("mmpp", {})):
+        jobs = generate_workload(60, arrival=spec, seed=3)
+        ts = [j.arrival_s for j in jobs]
+        assert ts == sorted(ts)
+        assert ts[0] > 0
+        assert all(np.isfinite(ts))
+
+
+def test_knob_independence():
+    """Changing one knob (the arrival process) must not reshuffle the
+    stage bodies: jobs keep identical stage structure because arrivals and
+    bodies draw from independent seeded streams."""
+    a = generate_workload(30, arrival=("poisson", dict(rate=1.0)), seed=5)
+    b = generate_workload(30, arrival=("poisson", dict(rate=9.0)), seed=5)
+    for ja, jb in zip(a, b):
+        assert ja.app == jb.app
+        assert [s.true_len for s in ja.stages] \
+            == [s.true_len for s in jb.stages]
+        assert [s.obs.model_id for s in ja.stages] \
+            == [s.obs.model_id for s in jb.stages]
+        assert ja.arrival_s != jb.arrival_s
+
+
+def test_zipf_demand_spans_full_zoo_and_is_skewed():
+    jobs = generate_workload(300, demand=("zipf", dict(alpha=1.2)), seed=0)
+    counts = np.zeros(10, int)
+    for j in jobs:
+        for s in j.stages:
+            counts[s.obs.model_id] += 1
+    assert (counts > 0).all()          # vision/MoE/SSM/whisper all hit
+    assert counts[0] > 3 * counts[9]   # genuinely heavy-tailed
+    # rank probabilities follow (k+1)^-alpha exactly
+    p = ZipfDemand(alpha=1.2, n_models=10).probs()
+    assert p.shape == (10,) and abs(p.sum() - 1.0) < 1e-12
+    assert (np.diff(p) < 0).all()
+
+
+def test_pareto_lengths_clipped_and_heavy():
+    rng = np.random.default_rng(0)
+    pl = ParetoLengths()
+    outs = np.array([pl.output_len(rng) for _ in range(4000)])
+    prompts = np.array([pl.prompt_len(rng) for _ in range(4000)])
+    assert outs.min() >= 4 and outs.max() <= pl.out_cap
+    assert prompts.min() >= 16 and prompts.max() <= pl.prompt_cap
+    # heavy tail: the p99.9 dwarfs the median
+    assert np.percentile(outs, 99.9) > 8 * np.median(outs)
+
+
+def test_diurnal_rate_profile_bounds():
+    d = DiurnalArrivals(base_rate=1.0, peak_rate=5.0, period_s=50.0)
+    ts = np.linspace(0, 200, 999)
+    rates = np.array([d.rate_at(t) for t in ts])
+    assert rates.min() >= 1.0 - 1e-9 and rates.max() <= 5.0 + 1e-9
+    scaled = d.scaled(2.0)
+    assert scaled.base_rate == 2.0 and scaled.peak_rate == 10.0
+
+
+def test_mmpp_phase_trace():
+    mm = MarkovModulatedArrivals(rates=(0.5, 10.0), dwell_s=(10.0, 5.0))
+    times, phases = mm.sample_with_phases(np.random.default_rng(1), 500)
+    assert (np.diff(times) >= 0).all()
+    assert set(np.unique(phases)) <= {0, 1}
+    assert len(set(np.unique(phases))) == 2   # both phases visited
+
+
+def test_registries_and_errors():
+    assert set(ARRIVALS) == {"poisson", "diurnal", "mmpp"}
+    assert set(DEMANDS) == {"zipf", "uniform"}
+    assert set(LENGTHS) == {"pareto"}
+    assert isinstance(make_arrival("poisson"), PoissonArrivals)
+    with pytest.raises(KeyError):
+        make_arrival("weibull")
+    with pytest.raises(KeyError):
+        scenario_workload("nope", 5)
+    with pytest.raises(ValueError):
+        PoissonArrivals(rate=0.0).sample(np.random.default_rng(0), 3)
+    with pytest.raises(ValueError):
+        DiurnalArrivals(base_rate=5.0, peak_rate=1.0).sample(
+            np.random.default_rng(0), 3)
+
+
+def test_scenario_presets():
+    for name in TAIL_SCENARIOS:
+        a = scenario_workload(name, 25, seed=2)
+        b = scenario_workload(name, 25, seed=2)
+        assert workload_fingerprint(a) == workload_fingerprint(b)
+        # rate_scale compresses/stretches the arrival span only
+        fast = scenario_workload(name, 25, seed=2, rate_scale=4.0)
+        assert fast[-1].arrival_s < a[-1].arrival_s
+        assert [s.true_len for j in fast for s in j.stages] \
+            == [s.true_len for j in a for s in j.stages]
