@@ -35,9 +35,10 @@ SMOKE_POLICIES = ("fcfs", "maestro")
 
 def _register(mode: str, backend: str = "inproc",
               clock: str = "virtual") -> None:
-    from benchmarks import (activation, colocation, engine_batching, fitness,
-                            gateway, kernels, memory, prediction, preemption,
-                            prefix_reuse, scheduling, tail_scenarios)
+    from benchmarks import (activation, colocation, decode_horizon,
+                            engine_batching, fitness, gateway, kernels,
+                            memory, prediction, preemption, prefix_reuse,
+                            scheduling, tail_scenarios)
     fast = mode != "full"
     smoke = mode == "smoke"
     if clock == "wall":
@@ -60,6 +61,14 @@ def _register(mode: str, backend: str = "inproc",
         "gateway_socket": lambda: gateway.socket_main(
             n_jobs={"full": 48, "fast": 12, "smoke": 5}[mode],
             fault_jobs=6),
+        "decode_horizon": lambda: decode_horizon.main(
+            n_jobs={"full": 24, "fast": 12, "smoke": 4}[mode],
+            gen_cap={"full": 16, "fast": 12, "smoke": 6}[mode],
+            max_new={"full": 96, "fast": 48, "smoke": 12}[mode],
+            max_run_s={"full": 1800.0, "fast": 900.0, "smoke": 300.0}[mode],
+            repeats=1 if smoke else 2,
+            backend=backend,
+            assert_speedup=not smoke),
         "engine_batching": lambda: engine_batching.main(
             n_jobs={"full": 32, "fast": 24, "smoke": 4}[mode],
             rate={"full": 8.0, "fast": 8.0, "smoke": 2.0}[mode],
@@ -91,6 +100,48 @@ def _register(mode: str, backend: str = "inproc",
         "fig10_activation": lambda: activation.main(fast=fast),
         "kernels": lambda: kernels.main(fast=fast),
     })
+
+
+# headline metric per BENCH file (all higher-is-better): a re-run that lands
+# >20% below the persisted value prints a loud regression warning BEFORE the
+# file is overwritten — the trajectory record stays honest without making
+# machine-dependent wall numbers a hard CI gate
+HEADLINES = {
+    "decode_horizon": "decode_speedup_h8_x",
+    "engine_batching": "chunked_speedup_x",
+    "prefix_reuse": "prefill_avoided_frac",
+}
+REGRESSION_FRAC = 0.20
+
+
+def check_headline_regression(name: str, payload: dict) -> None:
+    """Compare a bench payload's headline metric against the persisted
+    BENCH_<name>.json (if any) and warn on a >20% drop. Comparison is
+    best-effort: missing files, keys or zero baselines are silent."""
+    base = name
+    for sfx in ("_backend", "_wall", "_process", "_socket"):
+        if base.endswith(sfx):
+            base = base[:-len(sfx)]
+    key = HEADLINES.get(name) or HEADLINES.get(base)
+    if key is None or not isinstance(payload, dict):
+        return
+    from benchmarks.common import RESULTS
+    prev_file = RESULTS / f"BENCH_{name}.json"
+    if not prev_file.exists():
+        return
+    try:
+        prev = json.loads(prev_file.read_text()).get(key)
+    except (json.JSONDecodeError, OSError):
+        return
+    cur = payload.get(key)
+    if not isinstance(prev, (int, float)) or prev <= 0 \
+            or not isinstance(cur, (int, float)):
+        return
+    drop = (prev - cur) / prev
+    if drop > REGRESSION_FRAC:
+        print(f"[run] WARNING: {name} headline {key} regressed "
+              f"{drop:.0%} ({prev} -> {cur}); persisted baseline will be "
+              f"overwritten — investigate before trusting the new row")
 
 
 def repro_stamp(payload: dict) -> dict:
@@ -162,6 +213,7 @@ def main() -> None:
                             # backend-swept rows
                             suffix += "_backend"
                     payload["repro"] = repro_stamp(payload)
+                    check_headline_regression(f"{name}{suffix}", payload)
                 try:
                     save_result(f"BENCH_{name}{suffix}", payload)
                 except TypeError as e:   # non-JSON payload: keep bench green

@@ -23,9 +23,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(block_table, seq_lens, q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *, page_size: int, n_slots: int,
-                  scale: float):
+def _paged_kernel(block_table, seq_lens, q_ref, k_ref, v_ref, kn_ref, vn_ref,
+                  o_ref, m_scr, l_scr, acc_scr, *, page_size: int,
+                  n_slots: int, scale: float):
     b = pl.program_id(0)
     s = pl.program_id(1)          # page slot (sequential)
 
@@ -43,6 +43,18 @@ def _paged_kernel(block_table, seq_lens, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0]                                   # [H, hd]
         k = k_ref[0]                                   # [page, Hkv, hd]
         v = v_ref[0]
+        if kn_ref is not None:
+            # inline new-token K/V: splice the current token's row into the
+            # page block that holds position seq_len - 1, so the write is
+            # visible to this very iteration's read without a page-store
+            # scatter ordered before the kernel (decode-horizon hook). The
+            # spliced block is elementwise identical to scatter-then-read.
+            w_pos = seq_len - 1
+            sel = jax.lax.broadcasted_iota(
+                jnp.int32, k.shape, 0) == (w_pos % page_size)
+            hit = (s == w_pos // page_size)
+            k = jnp.where(sel & hit, kn_ref[0].astype(k.dtype), k)
+            v = jnp.where(sel & hit, vn_ref[0].astype(v.dtype), v)
         H, hd = q.shape
         Hkv = k.shape[1]
         g = H // Hkv
@@ -76,31 +88,54 @@ def _paged_kernel(block_table, seq_lens, q_ref, k_ref, v_ref, o_ref,
                    static_argnames=("page_size", "interpret"))
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     block_table: jax.Array, seq_lens: jax.Array,
-                    page_size: int = 64, interpret: bool = False) -> jax.Array:
+                    page_size: int = 64, interpret: bool = False,
+                    k_new: jax.Array | None = None,
+                    v_new: jax.Array | None = None) -> jax.Array:
     """q [B, H, hd]; {k,v}_pages [n_pages, page_size, Hkv, hd];
     block_table [B, max_slots] int32; seq_lens [B] int32. -> [B, H, hd].
 
     seq_lens is clamped to >= 1: with n_used == 0 no compute block would run
     and the finalize step would divide a zero accumulator — callers with idle
     rows (the serving engine's free decode slots) point them at a null page.
+
+    ``k_new``/``v_new`` [B, Hkv, hd] (optional): the current token's K/V,
+    made visible at position ``seq_len - 1`` inside the kernel instead of
+    requiring a page-store scatter sequenced before the call — the decode
+    horizon's in-loop read-your-own-write path (see ``ref.paged_attention_ref``
+    for the exact splice semantics; outputs are bitwise identical to
+    scatter-then-attend for live lanes).
     """
     B, H, hd = q.shape
     seq_lens = jnp.maximum(seq_lens, 1)
     Hkv = k_pages.shape[2]
     n_slots = block_table.shape[1]
     grid = (B, n_slots)
+    inline = k_new is not None
     kernel = functools.partial(_paged_kernel, page_size=page_size,
                                n_slots=n_slots, scale=hd ** -0.5)
+    if not inline:
+        def kernel(bt, sl, q_r, k_r, v_r, o_r, m_s, l_s, a_s):  # noqa: F811
+            _paged_kernel(bt, sl, q_r, k_r, v_r, None, None, o_r, m_s, l_s,
+                          a_s, page_size=page_size, n_slots=n_slots,
+                          scale=hd ** -0.5)
+    in_specs = [
+        pl.BlockSpec((1, H, hd), lambda b, s, bt, sl: (b, 0, 0)),
+        pl.BlockSpec((1, page_size, Hkv, hd),
+                     lambda b, s, bt, sl: (bt[b, s], 0, 0, 0)),
+        pl.BlockSpec((1, page_size, Hkv, hd),
+                     lambda b, s, bt, sl: (bt[b, s], 0, 0, 0)),
+    ]
+    operands = [q, k_pages, v_pages]
+    if inline:
+        in_specs += [
+            pl.BlockSpec((1, Hkv, hd), lambda b, s, bt, sl: (b, 0, 0)),
+            pl.BlockSpec((1, Hkv, hd), lambda b, s, bt, sl: (b, 0, 0)),
+        ]
+        operands += [k_new, v_new]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, H, hd), lambda b, s, bt, sl: (b, 0, 0)),
-            pl.BlockSpec((1, page_size, Hkv, hd),
-                         lambda b, s, bt, sl: (bt[b, s], 0, 0, 0)),
-            pl.BlockSpec((1, page_size, Hkv, hd),
-                         lambda b, s, bt, sl: (bt[b, s], 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, H, hd), lambda b, s, bt, sl: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((Hkv, H // Hkv, 1), jnp.float32),
@@ -112,4 +147,4 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
         interpret=interpret)
-    return fn(block_table, seq_lens, q, k_pages, v_pages)
+    return fn(block_table, seq_lens, *operands)

@@ -23,12 +23,24 @@ def flash_attention_ref(q, k, v, causal: bool = True):
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
-def paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens):
+def paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens,
+                        k_new=None, v_new=None):
     """q [B,H,hd]; pages [n_pages, page, Hkv, hd]; block_table [B,slots].
 
     ``seq_lens`` is clamped to >= 1 (matching the Pallas kernel's contract):
     a zero-length row would softmax over an all-masked score vector and emit
-    NaN — serving points idle decode slots at a null page instead."""
+    NaN — serving points idle decode slots at a null page instead.
+
+    ``k_new``/``v_new`` [B,Hkv,hd] (optional): the current token's K/V,
+    spliced into each sequence's gathered view at position ``seq_len - 1``
+    WITHOUT requiring the caller to scatter it into the page arrays first.
+    This is the in-horizon visibility hook of the multi-token decode loop:
+    the freshly projected K/V of iteration ``h`` is read by iteration ``h``'s
+    own attention inline, and the page-store scatter (still needed so
+    iterations ``> h`` see it) drops off the attention's critical path. The
+    spliced tensor is elementwise identical to scatter-then-gather for every
+    live lane (private row, unique offset), so outputs are bitwise equal to
+    the pre-scatter path."""
     B, H, hd = q.shape
     n_pages, page, Hkv, _ = k_pages.shape
     slots = block_table.shape[1]
@@ -36,6 +48,11 @@ def paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens):
     # gather each sequence's pages into a contiguous [B, slots*page, Hkv, hd]
     k = k_pages[block_table].reshape(B, slots * page, Hkv, hd)
     v = v_pages[block_table].reshape(B, slots * page, Hkv, hd)
+    if k_new is not None:
+        w = (jnp.arange(slots * page)[None, :]
+             == (seq_lens - 1)[:, None])[..., None, None]
+        k = jnp.where(w, k_new[:, None].astype(k.dtype), k)
+        v = jnp.where(w, v_new[:, None].astype(v.dtype), v)
     if Hkv != H:
         k = jnp.repeat(k, H // Hkv, axis=2)
         v = jnp.repeat(v, H // Hkv, axis=2)

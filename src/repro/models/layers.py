@@ -310,7 +310,8 @@ def attn_decode_paged(p, x, cfg: ArchConfig, ctx: ShardingCtx,
                       positions: jax.Array, k_pages: jax.Array,
                       v_pages: jax.Array, layer, block_table: jax.Array,
                       seq_lens: jax.Array, rows: jax.Array, offs: jax.Array,
-                      attend) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                      attend, inline: bool = False
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Single-token decode attention against the PAGED KV arena.
 
     x [B,1,D]; k/v_pages [L, n_rows, page, Hkv, hd] — the node arena plane,
@@ -321,6 +322,14 @@ def attn_decode_paged(p, x, cfg: ArchConfig, ctx: ShardingCtx,
     ``attend`` (the Pallas paged kernel on TPU, the jnp reference elsewhere —
     chosen once at engine construction) reads through the block table.
     Returns (output [B,1,D], k_pages, v_pages).
+
+    ``inline=True`` (the decode-horizon hot loop) hands the new token's K/V
+    to ``attend`` directly (``k_new``/``v_new`` splice, see
+    ``kernels.paged_attention``) so the attention read no longer depends on
+    the full-plane scatter; the scatter still runs — later horizon
+    iterations read the token from its page — but off the critical path.
+    Outputs are bitwise identical to the ``inline=False`` path for every
+    live lane.
     """
     B = x.shape[0]
     H, hd = cfg.n_heads, cfg.head_dim_
@@ -328,13 +337,24 @@ def attn_decode_paged(p, x, cfg: ArchConfig, ctx: ShardingCtx,
     q, k_new, v_new = _project_qkv(p, h, h, cfg, cross=False)
     q = apply_rope(q, positions[:, None], cfg.rope_theta)
     k_new = apply_rope(k_new, positions[:, None], cfg.rope_theta)
-    k_pages = k_pages.at[layer, rows, offs].set(
-        k_new[:, 0].astype(k_pages.dtype))
-    v_pages = v_pages.at[layer, rows, offs].set(
-        v_new[:, 0].astype(v_pages.dtype))
-    kp = lax.dynamic_index_in_dim(k_pages, layer, 0, keepdims=False)
-    vp = lax.dynamic_index_in_dim(v_pages, layer, 0, keepdims=False)
-    o = attend(q[:, 0], kp, vp, block_table, seq_lens)       # [B, H, hd]
+    if inline:
+        kp = lax.dynamic_index_in_dim(k_pages, layer, 0, keepdims=False)
+        vp = lax.dynamic_index_in_dim(v_pages, layer, 0, keepdims=False)
+        o = attend(q[:, 0], kp, vp, block_table, seq_lens,
+                   k_new=k_new[:, 0].astype(k_pages.dtype),
+                   v_new=v_new[:, 0].astype(v_pages.dtype))
+        k_pages = k_pages.at[layer, rows, offs].set(
+            k_new[:, 0].astype(k_pages.dtype))
+        v_pages = v_pages.at[layer, rows, offs].set(
+            v_new[:, 0].astype(v_pages.dtype))
+    else:
+        k_pages = k_pages.at[layer, rows, offs].set(
+            k_new[:, 0].astype(k_pages.dtype))
+        v_pages = v_pages.at[layer, rows, offs].set(
+            v_new[:, 0].astype(v_pages.dtype))
+        kp = lax.dynamic_index_in_dim(k_pages, layer, 0, keepdims=False)
+        vp = lax.dynamic_index_in_dim(v_pages, layer, 0, keepdims=False)
+        o = attend(q[:, 0], kp, vp, block_table, seq_lens)   # [B, H, hd]
     o = o.reshape(B, 1, H * hd).astype(x.dtype)
     return ctx.cs(o @ p["wo"], "batch", None, None), k_pages, v_pages
 

@@ -425,7 +425,8 @@ class Model:
                 self.cfg.head_dim_, self.cfg.dtype)
 
     def _group_decode_paged(self, x, gp, gc, g, kp, vp, block_tables,
-                            seq_lens, rows, offs, positions, bases, attend):
+                            seq_lens, rows, offs, positions, bases, attend,
+                            inline=False):
         """_group_decode with self-attention KV read/written through arena
         pages; ``gc``/``new_c`` carry only the non-paged (SSM / cross)
         entries."""
@@ -437,7 +438,7 @@ class Model:
                 o, kp, vp = L.attn_decode_paged(
                     sp["attn"], x, cfg, ctx, positions, kp, vp,
                     bases[f"slot{i}"] + g, block_tables, seq_lens, rows,
-                    offs, attend)
+                    offs, attend, inline=inline)
             else:
                 o, c = M2.ssm_decode(sp["ssm"], x, gc[f"slot{i}"], cfg, ctx)
                 new_c[f"slot{i}"] = c
@@ -455,7 +456,7 @@ class Model:
 
     def decode_step_paged(self, params, state_cache, k_pages, v_pages,
                           block_tables, seq_lens, rows, offs, tokens,
-                          positions, attend):
+                          positions, attend, inline=False):
         """One token for every sequence through the PAGED KV arena.
 
         Mirrors :meth:`decode_step`, but self-attention KV lives in the
@@ -478,7 +479,7 @@ class Model:
                 sc)
             x, new_c, kp, vp = self._group_decode_paged(
                 x, gp, gc, g, kp, vp, block_tables, seq_lens, rows, offs,
-                positions, bases, attend)
+                positions, bases, attend, inline=inline)
             sc = jax.tree.map(
                 lambda a, n: lax.dynamic_update_index_in_dim(a, n, g, 0),
                 sc, new_c)
@@ -490,6 +491,81 @@ class Model:
         x = rms_norm(x, params["final_ln"], self.cfg.norm_eps)
         logits = (x[:, 0] @ self.unembed_weight(params)).astype(jnp.float32)
         return logits, state_cache, k_pages, v_pages
+
+    @property
+    def supports_decode_horizon(self) -> bool:
+        """Multi-token decode-horizon eligibility: the horizon loop carries
+        only paged pages + positions between iterations, so every layer's
+        context must live in paged self-attention KV — the same pure causal
+        self-attention condition as prefix reuse (SSM/hybrid state and
+        cross-attention caches would need in-loop state threading; those
+        models fall back to one-token steps)."""
+        return self.supports_prefix_reuse
+
+    def decode_horizon(self, params, state_cache, k_pages, v_pages,
+                       block_tables, positions, last_tokens, live, rem, cap,
+                       eos, s_max, *, attend, horizon: int,
+                       page_tokens: int):
+        """Run up to ``horizon`` greedy decode iterations entirely on device.
+
+        One jitted program replaces ``horizon`` host round-trips: a
+        ``lax.fori_loop`` whose body is exactly :meth:`decode_step_paged`
+        (same per-lane arithmetic as the one-token engine path — greedy
+        parity is structural, not approximate), with on-device argmax
+        sampling, in-loop paged-KV writes (iteration ``h`` reads its own
+        write inline and iterations ``> h`` read it from the pages), and a
+        per-lane stop mask.
+
+        block_tables [B, W] plane rows; positions [B] next write position;
+        last_tokens [B] the token feeding iteration 0; live [B] bool lanes
+        decoding this launch; rem [B] tokens until ``max_new``; cap [B]
+        page-granted emission budget (freezes a lane WITHOUT finishing it —
+        truncation backpressure stays host-decided); eos [B] end token or -1;
+        s_max scalar sequence window. A lane freezes permanently once it
+        emits its stage-final token (``rem``/``eos``/``s_max``, the same
+        predicate the engine applies after each one-token step) or exhausts
+        ``cap``; frozen lanes emit the -1 sentinel, write only to the null
+        row, and attend over a clamped length-1 window whose output is
+        discarded.
+
+        Returns ``(tokens [B, horizon] int32 with -1 in frozen lanes,
+        positions, state_cache, k_pages, v_pages)`` — ONE host sync fetches
+        the token block; positions stay on device as the next launch's
+        persistent buffer.
+        """
+        assert self.supports_decode_horizon, self.cfg.name
+        B = block_tables.shape[0]
+        lanes = jnp.arange(B)
+        out0 = jnp.full((B, horizon), -1, jnp.int32)
+        live = live.astype(jnp.bool_)
+
+        def body(h, carry):
+            out, live, pos, last, rem, cap, sc, kp, vp = carry
+            adv = live.astype(jnp.int32)
+            # frozen/idle lanes read+write the reserved null row (row 0),
+            # exactly like the one-token path's idle slots
+            rows = jnp.where(live, block_tables[lanes, pos // page_tokens], 0)
+            offs = jnp.where(live, pos % page_tokens, 0)
+            seq_lens = jnp.where(live, pos + 1, 1)
+            logits, sc, kp, vp = self.decode_step_paged(
+                params, sc, kp, vp, block_tables, seq_lens, rows, offs,
+                last[:, None], pos, attend, inline=True)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out = out.at[:, h].set(jnp.where(live, nxt, -1))
+            pos = pos + adv
+            rem = rem - adv
+            cap = cap - adv
+            last = jnp.where(live, nxt, last)
+            stop = ((rem <= 0) | ((eos >= 0) & (nxt == eos))
+                    | (pos >= s_max - 1) | (cap <= 0))
+            return (out, live & ~stop, pos, last, rem, cap, sc, kp, vp)
+
+        out, live, positions, last_tokens, rem, cap, state_cache, k_pages, \
+            v_pages = lax.fori_loop(
+                0, horizon, body,
+                (out0, live, positions, last_tokens, rem, cap, state_cache,
+                 k_pages, v_pages))
+        return out, positions, state_cache, k_pages, v_pages
 
     # ----------------------------------------------------------- cache specs
     def _slot_cache_spec(self, kind: SlotKind, batch: int, seq: int):

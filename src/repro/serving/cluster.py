@@ -42,6 +42,10 @@ class NodeSpec:
     # fused with decode, budgeted by max_batch_tokens per iteration)
     max_batch_tokens: Optional[int] = None
     prefill_chunk_tokens: int = 0
+    # decode horizon (1 = one host sync per decode iteration, bit-identical
+    # to pre-horizon behavior; H > 1 fuses up to H decode iterations into
+    # one jitted on-device loop with a single host sync per launch)
+    decode_horizon: int = 1
 
 
 @dataclasses.dataclass
@@ -89,6 +93,8 @@ def worker_specs(spec: ClusterSpec, seed: int = 1,
                        max_batch_tokens=ns.max_batch_tokens,
                        prefill_chunk_tokens=(ns.prefill_chunk_tokens
                                              or None),
+                       decode_horizon=(ns.decode_horizon
+                                       if ns.decode_horizon > 1 else None),
                        xla_flags=worker_xla_flags)
             for nid, ns in enumerate(spec.nodes)]
 
@@ -140,7 +146,8 @@ def build_fleet(spec: Optional[ClusterSpec] = None,
                                  prefix_cache=ns.prefix_cache,
                                  prefix_cache_pages=ns.prefix_cache_pages,
                                  max_batch_tokens=ns.max_batch_tokens,
-                                 prefill_chunk_tokens=ns.prefill_chunk_tokens))
+                                 prefill_chunk_tokens=ns.prefill_chunk_tokens,
+                                 decode_horizon=ns.decode_horizon))
     return fleet
 
 

@@ -102,7 +102,8 @@ class Engine:
                  kv_backend: Optional[str] = None, prefix_cache=None,
                  prefix_ns: Optional[str] = None,
                  max_batch_tokens: Optional[int] = None,
-                 prefill_chunk_tokens: int = 0):
+                 prefill_chunk_tokens: int = 0,
+                 decode_horizon: int = 1):
         """``arena``: the node-shared physical page store (a private one is
         created for standalone engines). ``kv_backend``: "pallas" | "ref" |
         "dense" — default picks the Pallas paged kernel on TPU and the jnp
@@ -120,7 +121,14 @@ class Engine:
         supports chunked prefill only; others keep monolithic prefill).
         ``max_batch_tokens``: per-iteration token budget across decode
         positions + prefill chunks (None = unbounded; at least one chunk
-        always advances so prefill cannot starve)."""
+        always advances so prefill cannot starve).
+        ``decode_horizon``: > 1 fuses up to that many decode iterations into
+        one jitted on-device program per ``step()`` (paged engines whose
+        model supports it only; see :meth:`Model.decode_horizon`) — one host
+        sync per horizon instead of per token. 1 (the default) keeps the
+        original one-token step, bit-identical to earlier revisions; mixed
+        prefill+decode iterations always fall back to one-token decode so
+        chunked-prefill fusion semantics are untouched."""
         self.model = model
         self.params = params
         self.acc = accountant
@@ -171,6 +179,7 @@ class Engine:
         self._state_bytes = 0
         self.cache = None
         self._ensure_cache()
+        self.horizon = 1
         if self.paged:
             attend = (functools.partial(_pa.paged_attention,
                                         page_size=self.page_tokens)
@@ -182,12 +191,37 @@ class Engine:
                     functools.partial(model.decode_step_paged,
                                       attend=attend),
                     donate_argnums=(1, 2, 3)))
+            if decode_horizon and int(decode_horizon) > 1 \
+                    and model.supports_decode_horizon:
+                self.horizon = int(decode_horizon)
+                self._horizon_fwd = _model_jit(
+                    model, ("decode_horizon", kv_backend, self.page_tokens,
+                            self.horizon),
+                    lambda: jax.jit(
+                        functools.partial(model.decode_horizon,
+                                          attend=attend,
+                                          horizon=self.horizon,
+                                          page_tokens=self.page_tokens),
+                        donate_argnums=(1, 2, 3)))
         else:
             self._decode = _model_jit(
                 model, ("decode_dense",),
                 lambda: jax.jit(model.decode_step, donate_argnums=(1,)))
-        self._prefill_fwd = _model_jit(model, ("prefill",),
-                                       lambda: jax.jit(model.prefill))
+        # persistent device-side decode tables (horizon > 1 only): block
+        # tables / positions are uploaded when admission, release, eviction
+        # or page growth dirties them — never rebuilt per token
+        self._dev_bt = None
+        self._dev_pos = None
+        self._tables_dirty = True
+
+        def _prefill_tok(p, toks, extras):
+            # first-token argmax folded into the jitted prefill: the host
+            # fetches one int32 per sequence, never a logits row
+            logits, cache = model.prefill(p, toks, extras)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        self._prefill_fwd = _model_jit(model, ("prefill_tok",),
+                                       lambda: jax.jit(_prefill_tok))
         self.max_batch_tokens = max_batch_tokens
         self.chunk_tokens = (int(prefill_chunk_tokens)
                              if (prefill_chunk_tokens and self.paged
@@ -197,11 +231,17 @@ class Engine:
                                           page_size=self.page_tokens)
                         if kv_backend == "pallas"
                         else _ref.chunk_prefill_attention_ref)
+
+            def _chunk_tok(p, kp, vp, toks, pos, bt, rows, offs, last_idx):
+                logits, kp, vp = model.prefill_chunk(
+                    p, kp, vp, toks, pos, bt, rows, offs, last_idx,
+                    attend=attend_c)
+                return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                        kp, vp)
+
             self._chunk_fwd = _model_jit(
-                model, ("chunk", kv_backend, self.page_tokens),
-                lambda: jax.jit(
-                    functools.partial(model.prefill_chunk, attend=attend_c),
-                    donate_argnums=(1, 2)))
+                model, ("chunk_tok", kv_backend, self.page_tokens),
+                lambda: jax.jit(_chunk_tok, donate_argnums=(1, 2)))
         self._prefill_pos: Dict[int, int] = {}   # rid -> prompt tokens done
         # stubbed modality frontends (§IV prototype): encoder-decoder and
         # cross-attention models prefill against precomputed frame / patch
@@ -220,6 +260,11 @@ class Engine:
         self.stat_decode_tokens = 0
         self.stat_steps = 0
         self.stat_fused_steps = 0
+        # decode-horizon telemetry: horizon launches and decode-side host
+        # syncs (one blocking device->host fetch per one-token decode batch
+        # OR per horizon launch) — host_syncs_per_token = syncs / tokens
+        self.stat_horizon_steps = 0
+        self.stat_decode_syncs = 0
         self.finished: List[Request] = []
 
     # -------------------------------------------------------------- state
@@ -259,6 +304,8 @@ class Engine:
             if self._state_bytes:
                 self.acc.unregister_context(self._state_key)
             self._state_bytes = 0
+        self._dev_bt = self._dev_pos = None     # device tables go with KV
+        self._tables_dirty = True
 
     # ------------------------------------------------------------- admission
     def submit(self, req: Request) -> None:
@@ -308,6 +355,7 @@ class Engine:
             self.slot_of[req.req_id] = slot
             self.active[req.req_id] = req
             self._needs[req.req_id] = need
+            self._tables_dirty = True
             admitted.append(req)
         return admitted
 
@@ -389,9 +437,9 @@ class Engine:
 
     def _prefill_full(self, req: Request, slot: int) -> None:
         toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
-        logits, cache = self._prefill_fwd(self.params, toks,
-                                          req.extras
-                                          or self._modal_extras or {})
+        first_tok, cache = self._prefill_fwd(self.params, toks,
+                                             req.extras
+                                             or self._modal_extras or {})
         P = len(req.tokens)
         self._note_prefill_shape(("full", P))
         self.stat_prefill_tokens += P
@@ -423,7 +471,8 @@ class Engine:
                 else:
                     self.cache[name][kname] = write_state(tgt, arr)
         self.positions[slot] = P
-        self._first_token(req, int(jnp.argmax(logits[0])))
+        self._tables_dirty = True
+        self._first_token(req, int(first_tok[0]))
 
     def _prefill_suffix(self, req: Request, hit, slot: int) -> None:
         """Cache-hit prefill: gather matched prefix KV from the arena rows
@@ -442,13 +491,21 @@ class Engine:
         toks = jnp.asarray(req.tokens[M:], jnp.int32)[None, :]
         self._note_prefill_shape(("suffix", len(req.tokens) - M, M))
         self.stat_prefill_tokens += len(req.tokens) - M
-        logits, k_sfx, v_sfx = _model_jit(
-            self.model, ("prefill_suffix",),
-            lambda: jax.jit(self.model.prefill_suffix))(
+        model = self.model
+
+        def _suffix_tok(p, toks, pk, pv):
+            logits, k_sfx, v_sfx = model.prefill_suffix(p, toks, pk, pv)
+            return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                    k_sfx, v_sfx)
+
+        first_tok, k_sfx, v_sfx = _model_jit(
+            self.model, ("prefill_suffix_tok",),
+            lambda: jax.jit(_suffix_tok))(
             self.params, toks, pk, pv)
         self.binding.write_prompt_at(req.req_id, k_sfx[:, 0], v_sfx[:, 0], M)
         self.positions[slot] = len(req.tokens)
-        self._first_token(req, int(jnp.argmax(logits[0])))
+        self._tables_dirty = True
+        self._first_token(req, int(first_tok[0]))
         req.prefill_avoided = M
         self._pc.tokens_avoided += M
 
@@ -503,12 +560,13 @@ class Engine:
             self._prefill_pos[rid] = p0 + n
             self.stat_prefill_tokens += n
         self._note_prefill_shape(("chunk", C))
+        self._tables_dirty = True
         plane = self.binding.plane
-        logits, plane.k, plane.v = self._chunk_fwd(
+        tok_dev, plane.k, plane.v = self._chunk_fwd(
             self.params, plane.k, plane.v, jnp.asarray(toks),
             jnp.asarray(pos), jnp.asarray(bt), jnp.asarray(rows),
             jnp.asarray(offs), jnp.asarray(last_idx))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        nxt = np.asarray(tok_dev)
         for rid in rids:
             req = self.active[rid]
             if self._prefill_pos[rid] < len(req.tokens):
@@ -538,16 +596,34 @@ class Engine:
         # iteration after their final chunk — snapshot the decode set first
         decode_rids = [rid for rid in self.active
                        if rid not in self._prefill_pos]
+        # mixed prefill+decode iterations fall back to one-token decode so
+        # chunked-prefill fusion semantics stay untouched; pure-decode
+        # iterations launch the on-device horizon
+        use_horizon = self.horizon > 1 and not self._prefill_pos
+        caps: Dict[int, int] = {}
         if decode_rids and self.paged:
             # grow page coverage for this step's token writes; a sequence
             # the pool cannot extend finishes truncated (honest
             # backpressure instead of silent overflow)
             for rid in list(decode_rids):
                 pos = int(self.positions[self.slot_of[rid]])
-                if not self.binding.ensure_tokens(rid, pos + 1):
-                    self.active[rid].truncated = True
-                    self._release(rid)
-                    decode_rids.remove(rid)
+                if use_horizon:
+                    # pre-grant up to a horizon's worth of pages; a partial
+                    # grant caps that lane's emission budget (it stays
+                    # active and retries next step), a zero grant truncates
+                    # exactly like the one-token path
+                    req = self.active[rid]
+                    want = min(self.horizon, req.max_new - len(req.out),
+                               self.s_max - 1 - pos)
+                    got = self._pregrant(rid, pos, want)
+                    if got > 0:
+                        caps[rid] = got
+                        continue
+                elif self.binding.ensure_tokens(rid, pos + 1):
+                    continue
+                self.active[rid].truncated = True
+                self._release(rid)
+                decode_rids.remove(rid)
         if self._prefill_pos:
             # token-budget split: decode contributes one position per
             # sequence, the remainder admits whole prefill chunks; at least
@@ -561,7 +637,9 @@ class Engine:
             self._prefill_chunk_batch(advance)
             if decode_rids:
                 self.stat_fused_steps += 1
-        if decode_rids:
+        if decode_rids and use_horizon and self.paged:
+            self._decode_horizon_batch(decode_rids, caps)
+        elif decode_rids:
             self._ensure_cache()
             toks = np.zeros((self.max_slots, 1), np.int32)
             for rid in decode_rids:
@@ -573,7 +651,9 @@ class Engine:
                     self.params, self.cache, jnp.asarray(toks),
                     jnp.asarray(self.positions))
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            self.stat_decode_syncs += 1
             self.stat_decode_tokens += len(decode_rids)
+            self._tables_dirty = True
             done = []
             for rid in decode_rids:
                 req = self.active[rid]
@@ -588,6 +668,97 @@ class Engine:
             for rid in done:
                 self._release(rid)
         return self.finished[n0:]
+
+    def _pregrant(self, rid: int, pos: int, want: int) -> int:
+        """Pre-grant pages for up to ``want`` horizon writes starting at
+        ``pos``. Returns the emission budget actually covered (0 = not even
+        one write grantable -> caller truncates, the same backpressure as
+        the one-token path). Grants are page-granular: when the pool
+        refuses the full horizon the budget falls back page by page, down
+        to whatever the current grant already covers."""
+        page = self.page_tokens
+        have = self.binding.token_capacity(rid) - pos
+        e = want
+        while e > max(have, 0):
+            if self.binding.ensure_tokens(rid, pos + e):
+                self._tables_dirty = True   # new pages -> new block rows
+                break
+            # largest budget needing one page fewer
+            e = (pos + e - 1) // page * page - pos
+        if e <= 0:
+            return 0
+        # covered by pages already granted: record the token high-water
+        # mark with the pool (never allocates here, cannot fail)
+        self.binding.ensure_tokens(rid, pos + e)
+        if self._pc is not None:
+            # a horizon write must never land on a shared row: privatise
+            # every page the launch will touch before it starts
+            for pidx in range(pos // page, (pos + e - 1) // page + 1):
+                if self.binding.make_private(rid, pidx):
+                    self._pc.cow_copies += 1
+                    self._tables_dirty = True
+        return e
+
+    def _decode_horizon_batch(self, decode_rids: List[int],
+                              caps: Dict[int, int]) -> None:
+        """One on-device horizon launch: up to ``self.horizon`` decode
+        iterations for every decoding lane, ONE host sync for the token
+        block. Per-lane stop masks freeze finished lanes on device; the
+        host re-applies the same done predicate over the emitted tokens to
+        release finished requests (boundary preemption granularity becomes
+        the horizon launch, measured — not asserted — in
+        ``benchmarks/decode_horizon.py``)."""
+        self._ensure_cache()
+        B = self.max_slots
+        live = np.zeros(B, bool)
+        last = np.zeros(B, np.int32)
+        rem = np.ones(B, np.int32)
+        cap = np.zeros(B, np.int32)
+        eos = np.full(B, -1, np.int32)
+        for rid in decode_rids:
+            slot = self.slot_of[rid]
+            req = self.active[rid]
+            live[slot] = True
+            last[slot] = req.out[-1]
+            rem[slot] = req.max_new - len(req.out)
+            cap[slot] = caps[rid]
+            if req.eos is not None:
+                eos[slot] = req.eos
+        if self._tables_dirty or self._dev_bt is None:
+            bt = np.zeros((B, self.binding.bt_width), np.int32)
+            for rid in decode_rids:
+                bt[self.slot_of[rid]] = self.binding.row_table(rid)
+            self._dev_bt = jnp.asarray(bt)
+            self._dev_pos = jnp.asarray(self.positions)
+            self._tables_dirty = False
+        plane = self.binding.plane
+        tok_blk, self._dev_pos, self.cache, plane.k, plane.v = \
+            self._horizon_fwd(
+                self.params, self.cache, plane.k, plane.v, self._dev_bt,
+                self._dev_pos, jnp.asarray(last), jnp.asarray(live),
+                jnp.asarray(rem), jnp.asarray(cap), jnp.asarray(eos),
+                jnp.int32(self.s_max))
+        blk = np.asarray(tok_blk)               # the ONE host sync
+        self.stat_decode_syncs += 1
+        self.stat_horizon_steps += 1
+        done = []
+        for rid in decode_rids:
+            req = self.active[rid]
+            slot = self.slot_of[rid]
+            for t in blk[slot]:
+                if t < 0:
+                    break                       # lane froze on device
+                tok = int(t)
+                req.out.append(tok)
+                self.positions[slot] += 1
+                self.stat_decode_tokens += 1
+                if (len(req.out) >= req.max_new
+                        or (req.eos is not None and tok == req.eos)
+                        or self.positions[slot] >= self.s_max - 1):
+                    done.append(rid)
+                    break
+        for rid in done:
+            self._release(rid)
 
     def _decode_paged(self, toks: np.ndarray, decode_rids: List[int]):
         """One paged decode step: build block tables / write coordinates for
@@ -627,6 +798,7 @@ class Engine:
         self.binding.free_seq(rid)      # pages -> pool -> arena rows
         self.free_slots.append(slot)
         self.positions[slot] = 0
+        self._tables_dirty = True
         self.finished.append(req)
 
     # ------------------------------------------------------------ preemption
@@ -657,6 +829,7 @@ class Engine:
         self.binding.free_seq(req_id)
         self.free_slots.append(slot)
         self.positions[slot] = 0
+        self._tables_dirty = True
         req.out.clear()
         req.ttft_s = 0.0            # the discarded first token doesn't count
         return req

@@ -587,8 +587,12 @@ class ClusterGateway:
         # kv_stats snapshots may lack them — remote workers predate the keys)
         for k in ("engine_prefill_tokens", "engine_decode_tokens",
                   "engine_prefill_compiles", "engine_fused_steps",
-                  "engine_steps"):
+                  "engine_steps", "engine_horizon_steps",
+                  "engine_decode_syncs"):
             setattr(m, k, int(sum(s.get(k, 0) for s in stats)))
+        # decode-horizon headline: host round-trips per emitted decode token
+        m.host_syncs_per_token = (m.engine_decode_syncs
+                                  / max(m.engine_decode_tokens, 1))
         m.truncated_stages = self._truncated
         m.node_backend = self.node_backend
         m.clock = self.clock.name

@@ -256,6 +256,13 @@ class ModelKVBinding:
         self.reclaim()
 
     # --------------------------------------------------------------- views
+    def token_capacity(self, seq_id: int) -> int:
+        """Tokens the sequence's CURRENT page grant can hold — the horizon
+        pre-grant reads this to cap a launch's emission budget to what is
+        already granted when the pool refuses further extension (page-
+        granular truncation backpressure, decided on host)."""
+        return len(self.pool.seqs[seq_id].pages) * self.pool.page_tokens
+
     def seq_rows(self, seq_id: int) -> List[int]:
         return [self.row_of[p] for p in self.pool.seqs[seq_id].pages]
 

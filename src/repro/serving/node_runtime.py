@@ -38,7 +38,8 @@ class NodeRuntime:
                  page_tokens: int = 16, prefix_cache: bool = False,
                  prefix_cache_pages: int = 256,
                  max_batch_tokens: Optional[int] = None,
-                 prefill_chunk_tokens: int = 0):
+                 prefill_chunk_tokens: int = 0,
+                 decode_horizon: int = 1):
         self.node_id = node_id
         self.cluster_id = cluster_id
         self.zoo = zoo
@@ -60,6 +61,7 @@ class NodeRuntime:
         # forwarded to every colocated engine at activation
         self.max_batch_tokens = max_batch_tokens
         self.prefill_chunk_tokens = prefill_chunk_tokens
+        self.decode_horizon = decode_horizon
         profiles = {
             name: ModelProfile(
                 name=name, weight_bytes=_tree_bytes(host_params[name]),
@@ -111,7 +113,8 @@ class NodeRuntime:
                 arena=self.arena, prefix_cache=self.prefix_cfg,
                 prefix_ns=name,
                 max_batch_tokens=self.max_batch_tokens,
-                prefill_chunk_tokens=self.prefill_chunk_tokens)
+                prefill_chunk_tokens=self.prefill_chunk_tokens,
+                decode_horizon=self.decode_horizon)
         else:
             self.engines[name].params = self.device_params[name]
         return time.perf_counter() - t0
@@ -280,7 +283,13 @@ class NodeRuntime:
                "engine_fused_steps": sum(
                    e.stat_fused_steps for e in self.engines.values()),
                "engine_steps": sum(
-                   e.stat_steps for e in self.engines.values())}
+                   e.stat_steps for e in self.engines.values()),
+               # decode-horizon telemetry: fused multi-token launches and
+               # host round-trips (one per horizon launch vs one per token)
+               "engine_horizon_steps": sum(
+                   e.stat_horizon_steps for e in self.engines.values()),
+               "engine_decode_syncs": sum(
+                   e.stat_decode_syncs for e in self.engines.values())}
         if self.arena.prefix_index is not None:
             out.update(self.arena.prefix_index.stats())
         return out

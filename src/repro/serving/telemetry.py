@@ -155,6 +155,12 @@ class GatewayMetrics:
     engine_prefill_compiles: int = 0
     engine_fused_steps: int = 0
     engine_steps: int = 0
+    # decode horizon (multi-token on-device decode): fleet-summed horizon
+    # launches, decode host round-trips, and the headline ratio — host
+    # syncs per emitted decode token (1.0 at H=1, ~1/H in pure decode)
+    engine_horizon_steps: int = 0
+    engine_decode_syncs: int = 0
+    host_syncs_per_token: float = 0.0
     # transport + membership plane (PR 7): worker deaths witnessed this
     # run, the in-flight stages evacuated back to the ready queue because
     # of them, end-of-run liveness state per node, idle-ping misses, nodes

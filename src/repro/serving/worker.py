@@ -104,6 +104,8 @@ class WorkerSpec:
     # fused iteration; prefill_chunk_tokens > 0 enables chunked prefill
     max_batch_tokens: Optional[int] = None
     prefill_chunk_tokens: Optional[int] = None
+    # decode_horizon > 1 fuses that many decode iterations per host sync
+    decode_horizon: Optional[int] = None
     seed: int = 1
     # extra XLA_FLAGS applied inside the child BEFORE its XLA client forms
     # (e.g. "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1"
@@ -146,7 +148,8 @@ def _worker_main(conn, spec: WorkerSpec) -> None:
                                  spec.prefix_cache_pages),
                                 ("max_batch_tokens", spec.max_batch_tokens),
                                 ("prefill_chunk_tokens",
-                                 spec.prefill_chunk_tokens))
+                                 spec.prefill_chunk_tokens),
+                                ("decode_horizon", spec.decode_horizon))
               if v is not None}
         node = NodeRuntime(spec.node_id, spec.cluster_id, zoo, host, **kw)
         conn.send(("ready", {"profiles": node.profiles,

@@ -1,0 +1,302 @@
+"""On-device multi-token decode horizon (fused H decode iterations).
+
+The parity contract is OUTPUT-LEVEL, inherited from the chunked-prefill PR:
+per-request greedy token sequences from a horizon engine (H > 1) must equal
+the one-token-per-sync engine (H = 1) exactly — prefix cache on and off, on
+every zoo model with self-attention KV, including eos stops, s_max
+truncation and pool-refusal backpressure. H = 1 is the construction default
+and shares the exact pre-horizon code path, so these tests pin the horizon
+against the engine's own unchanged baseline.
+
+Satellites pinned here: evict/cancel mid-horizon discards un-emitted tokens
+and leaks no KV pages (extends the chunked-prefill page-leak regression),
+compile counts stay flat across horizon values, the horizon/sync counters
+flow through NodeRuntime.kv_stats into gateway aggregation, and mixed
+prefill+decode iterations fall back to one-token decode.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.runtime.accounting import MemoryAccountant
+from repro.models import build_model
+from repro.serving.engine import Engine, Request
+
+HORIZON_ZOO = ("qwen3-8b", "starcoder2-15b")   # self-attention KV models
+
+
+@pytest.fixture(scope="module", params=HORIZON_ZOO)
+def zoo_model(request):
+    cfg = get_config(request.param).reduced()
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("qwen3-8b").reduced()
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(0, cfg.vocab, p))
+            for p in (3, 7, 12, 5, 9, 14)]
+
+
+def _drain_all(m, params, prompts, *, horizon, prefix_cache=False,
+               sequential=False, max_new=6, max_slots=3, s_max=64,
+               eos=None, **kw):
+    eng = Engine(m, params, MemoryAccountant(m_total=512e6),
+                 max_slots=max_slots, s_max=s_max, kv_backend="ref",
+                 prefix_cache=prefix_cache, decode_horizon=horizon, **kw)
+    out = {}
+    if sequential:
+        for i, p in enumerate(prompts):
+            eng.submit(Request(req_id=i, tokens=list(p), max_new=max_new,
+                               eos=eos))
+            for r in eng.drain():
+                out[r.req_id] = r
+    else:
+        for i, p in enumerate(prompts):
+            eng.submit(Request(req_id=i, tokens=list(p), max_new=max_new,
+                               eos=eos))
+        for r in eng.drain():
+            out[r.req_id] = r
+    return eng, out
+
+
+def _outs(done):
+    return {k: r.out for k, r in done.items()}
+
+
+# ------------------------------------------------------- output-level parity
+def test_horizon_matches_h1_every_zoo_model(zoo_model):
+    cfg, m, params = zoo_model
+    assert m.supports_decode_horizon
+    prompts = _prompts(cfg)
+    _, base = _drain_all(m, params, prompts, horizon=1, max_new=12)
+    for h in (4, 8, 16):
+        eng, got = _drain_all(m, params, prompts, horizon=h, max_new=12)
+        assert eng.horizon == h
+        assert _outs(got) == _outs(base), f"horizon={h}"
+        assert eng.stat_horizon_steps > 0
+        assert eng.arena.mapped_pages() == 0
+
+
+def test_horizon_matches_h1_with_prefix_cache(tiny):
+    cfg, m, params = tiny
+    rng = np.random.default_rng(5)
+    base_p = list(rng.integers(0, cfg.vocab, 40))
+    prompts = [base_p,                          # indexes 2 full pages
+               base_p[:32] + [3, 1, 4, 1, 5],   # hits both full pages
+               base_p[:16] + [9] * 20,          # hits page 0 only
+               base_p[:20] + [7] * 11]          # partial-page COW hit
+    _, base = _drain_all(m, params, prompts, horizon=1, sequential=True,
+                         max_slots=2, max_new=8)
+    for pc in (False, True):
+        eng, got = _drain_all(m, params, prompts, horizon=8,
+                              prefix_cache=pc, sequential=True,
+                              max_slots=2, max_new=8)
+        assert _outs(got) == _outs(base), pc
+        if pc:   # horizon writes were privatised, never landed on shared rows
+            assert [got[k].prefill_avoided for k in sorted(got)] == \
+                   [0, 32, 16, 20]
+        assert eng.arena.check_mirror()
+
+
+def test_horizon_eos_and_smax_stops_match_h1(tiny):
+    """Mid-horizon stops: a lane hitting eos or the s_max wall freezes on
+    device and the un-emitted tail of its token block is discarded."""
+    cfg, m, params = tiny
+    prompts = _prompts(cfg)[:4]
+    _, probe = _drain_all(m, params, prompts, horizon=1, max_new=10)
+    eos = probe[0].out[3]          # a token known to appear mid-stream
+    for kw in (dict(eos=eos), dict(s_max=20)):
+        _, base = _drain_all(m, params, prompts, horizon=1, max_new=10, **kw)
+        _, got = _drain_all(m, params, prompts, horizon=8, max_new=10, **kw)
+        assert _outs(got) == _outs(base), kw
+    assert any(len(r.out) < 10 for r in base.values())   # the wall was hit
+
+
+def test_horizon_pool_backpressure_truncates_like_h1(tiny):
+    """When the pool cannot pre-grant even one token the lane truncates —
+    the same honest backpressure as the one-token path; partial grants cap
+    the launch but the lane keeps retrying. Pool growth is refused outright
+    after prefill, so both engines hit the wall at the same page boundary."""
+    cfg, m, params = tiny
+    prompts = [[1, 2, 3], [4, 5, 6, 7]]
+
+    def run(h):
+        eng = Engine(m, params, MemoryAccountant(m_total=512e6),
+                     max_slots=2, s_max=256, kv_backend="ref",
+                     decode_horizon=h)
+        eng.pool._grow(4)                        # fixed page inventory...
+        eng.pool._grow = lambda n: False         # ...and not one page more
+        for i, p in enumerate(prompts):
+            # pred_len=1 keeps the admission grant near prompt-size, so
+            # decode must extend page coverage mid-stream
+            eng.submit(Request(req_id=i, tokens=list(p), max_new=200,
+                               pred_len=1))
+        done = {r.req_id: r for r in eng.drain()}
+        assert eng.arena.mapped_pages() == 0
+        return done
+
+    base, got = run(1), run(16)
+    assert all(r.truncated for r in base.values())   # pool really refused
+    assert all(len(r.out) < 200 for r in base.values())
+    assert _outs(got) == _outs(base)
+    assert {k: r.truncated for k, r in got.items()} == \
+           {k: r.truncated for k, r in base.items()}
+
+
+# ----------------------------------------------- preemption / page-leak
+def test_evict_mid_horizon_frees_pages_and_replays_identically(tiny):
+    cfg, m, params = tiny
+    rng = np.random.default_rng(3)
+    prompt = list(rng.integers(0, cfg.vocab, 24))
+    _, base = _drain_all(m, params, [prompt], horizon=8, max_new=12)
+    acc = MemoryAccountant(m_total=512e6)
+    eng = Engine(m, params, acc, max_slots=2, s_max=64, kv_backend="ref",
+                 decode_horizon=8)
+    eng.submit(Request(req_id=0, tokens=list(prompt), max_new=12))
+    eng.step()             # prefill + first token + one horizon launch
+    assert eng.stat_horizon_steps == 1
+    assert 0 in eng.active and len(eng.active[0].out) > 1
+    req = eng.evict(0)
+    # un-emitted horizon tokens are gone WITH the emitted ones: boundary
+    # preemption discards the partial output wholesale
+    assert req is not None and req.out == []
+    assert eng.arena.mapped_pages() == 0 and eng.arena.mapped_rows() == 0
+    assert acc.m_kv == pytest.approx(0.0)
+    assert eng.arena.check_mirror()
+    # the requeued stage replays the identical greedy sequence
+    eng.submit(req)
+    done = {r.req_id: r for r in eng.drain()}
+    assert _outs(done) == _outs(base)
+
+
+def test_cancel_waiting_request_untouched_by_horizon(tiny):
+    cfg, m, params = tiny
+    eng = Engine(m, params, MemoryAccountant(m_total=512e6), max_slots=1,
+                 s_max=64, kv_backend="ref", decode_horizon=8)
+    eng.submit(Request(req_id=0, tokens=[1, 2, 3], max_new=20))
+    eng.submit(Request(req_id=1, tokens=[4, 5, 6], max_new=4))
+    eng.step(); eng.step()            # req 0 decoding via horizon; 1 waits
+    assert eng.cancel(1).req_id == 1  # waiting -> no KV held, plain removal
+    done = eng.drain()
+    assert [r.req_id for r in done] == [0] and len(done[0].out) == 20
+
+
+# ----------------------------------------------- compile + sync telemetry
+def test_compile_count_flat_across_horizon(tiny):
+    cfg, m, params = tiny
+    prompts = _prompts(cfg)
+    assert len({len(p) for p in prompts}) == 6
+    engs = {h: _drain_all(m, params, prompts, horizon=h)[0]
+            for h in (1, 4, 16)}
+    compiles = {h: e.prefill_compiles for h, e in engs.items()}
+    assert len(set(compiles.values())) == 1, compiles
+
+
+def test_horizon_sync_counters(tiny):
+    """One host sync per horizon launch: a single 17-token request (1 from
+    prefill + 16 decoded) needs exactly ceil(16/8) = 2 launches at H=8,
+    versus 16 decode syncs at H=1."""
+    cfg, m, params = tiny
+    prompts = [[1, 2, 3, 4, 5]]
+    e1, _ = _drain_all(m, params, prompts, horizon=1, max_new=17)
+    e8, _ = _drain_all(m, params, prompts, horizon=8, max_new=17)
+    assert e1.stat_decode_syncs == 16 and e1.stat_horizon_steps == 0
+    assert e8.stat_decode_syncs == 2 and e8.stat_horizon_steps == 2
+    assert e8.stat_decode_tokens == e1.stat_decode_tokens == 16
+
+
+def test_mixed_prefill_decode_iterations_fall_back_to_h1(tiny):
+    """While any sequence is mid-chunked-prefill the iteration decodes one
+    token per lane (fusion semantics untouched); pure-decode iterations
+    resume horizon launches. Outputs stay identical throughout."""
+    cfg, m, params = tiny
+    prompts = _prompts(cfg)
+    _, base = _drain_all(m, params, prompts, horizon=1, max_new=10)
+    eng, got = _drain_all(m, params, prompts, horizon=8, max_new=10,
+                          prefill_chunk_tokens=4)
+    assert _outs(got) == _outs(base)
+    assert eng.stat_fused_steps > 0       # mixed iterations happened...
+    assert eng.stat_horizon_steps > 0     # ...and pure-decode ones too
+
+
+def test_ssm_model_horizon_degrades_to_h1():
+    """A model without pure self-attention KV cannot run the on-device
+    horizon — the knob degrades to one-token decode instead of failing."""
+    cfg = get_config("mamba2-2.7b").reduced()
+    m = build_model(cfg)
+    assert not m.supports_decode_horizon
+    params = m.init(jax.random.PRNGKey(0))
+    prompts = _prompts(cfg)[:2]
+    _, base = _drain_all(m, params, prompts, horizon=1, max_new=4)
+    eng, got = _drain_all(m, params, prompts, horizon=8, max_new=4)
+    assert eng.horizon == 1 and eng.stat_horizon_steps == 0
+    assert _outs(got) == _outs(base)
+
+
+def test_node_kv_stats_exposes_horizon_counters(tiny):
+    from repro.serving.node_runtime import NodeRuntime
+    cfg, m, params = tiny
+    host = jax.tree.map(np.asarray, params)
+    node = NodeRuntime(0, 0, {cfg.name: m}, {cfg.name: host},
+                       hbm_budget=1.2e9, max_slots=2, s_max=64,
+                       decode_horizon=8)
+    node.submit(cfg.name, Request(req_id=0, tokens=[1, 2, 3, 4, 5],
+                                  max_new=9))
+    for _ in range(30):
+        node.step()
+        if not node.has_work():
+            break
+    st = node.kv_stats()
+    assert st["engine_horizon_steps"] == 1     # 8 decode tokens, one launch
+    assert st["engine_decode_syncs"] == 1
+    assert st["engine_decode_tokens"] == 8
+
+
+def test_gateway_aggregates_syncs_per_token(tiny):
+    """Fleet-level headline: host_syncs_per_token collapses toward 1/H and
+    virtual-clock outputs stay identical to the H=1 fleet."""
+    from repro.core.predictor.features import StageObservation
+    from repro.serving.cluster import (ClusterSpec, LiveJob, LiveStage,
+                                       NodeSpec, build_fleet)
+    from repro.serving.gateway import ClusterGateway
+    cfg, m, params = tiny
+    zoo = {cfg.name: m}
+    host = {cfg.name: jax.tree.map(np.asarray, params)}
+    rtt = np.array([[0.001]])
+
+    def obs(i):
+        return StageObservation(app=0, role=0, position=0.0,
+                                invocation_idx=i, tools_available=0,
+                                cot=False, prompt_len=6, model_id=0,
+                                text="s", src_cluster=0)
+
+    def jobs():
+        return [LiveJob(job_id=0, app="t", interactive=True, arrival_s=0.0,
+                        stages=[LiveStage(stage_id=s, job_id=0, deps=[],
+                                          obs=obs(s), interactive=True,
+                                          tokens=[1, 2, 3 + s, 4, 5, 6],
+                                          max_new=9) for s in range(3)])]
+
+    def run(h):
+        fleet = build_fleet(ClusterSpec(
+            nodes=(NodeSpec(0, max_slots=2, decode_horizon=h),),
+            rtt_s=rtt, model_names=(cfg.name,)), zoo=zoo, host=host)
+        gw = ClusterGateway(fleet, rtt, policy="fcfs")
+        metrics = gw.run(jobs())
+        return metrics, {s: e.out_len for s, e in gw.telemetry.events.items()}
+
+    m1, o1 = run(1)
+    m8, o8 = run(8)
+    assert o8 == o1
+    assert m8.engine_horizon_steps > 0 and m1.engine_horizon_steps == 0
+    assert m8.host_syncs_per_token <= 1 / 8
+    assert m8.host_syncs_per_token < m1.host_syncs_per_token

@@ -64,6 +64,50 @@ def test_paged_attention_sweep(B, H, Hkv, hd, page, slots, dtype):
                                np.asarray(exp, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("B,H,Hkv,hd,page,slots", [
+    (2, 8, 2, 64, 16, 8),
+    (3, 4, 4, 32, 8, 4),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_inline_splice_matches_scatter(B, H, Hkv, hd, page,
+                                                       slots, dtype):
+    """The decode-horizon read-your-own-write path: attending with the new
+    token's K/V spliced inline (``k_new``/``v_new``) must be BITWISE equal
+    to scattering it into the pages first and attending without the splice —
+    for the ref oracle and the Pallas kernel alike. The page row under the
+    write position holds garbage, proving the splice (not the page) is read.
+    """
+    n_pages = B * slots + 3
+    ks = jax.random.split(KEY, 7)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    kp = jax.random.normal(ks[1], (n_pages, page, Hkv, hd), dtype)
+    vp = jax.random.normal(ks[2], (n_pages, page, Hkv, hd), dtype)
+    bt = jax.random.permutation(ks[3], n_pages)[:B * slots] \
+        .reshape(B, slots).astype(jnp.int32)
+    seq_lens = jax.random.randint(ks[4], (B,), 1, page * slots + 1)
+    k_new = jax.random.normal(ks[5], (B, Hkv, hd), dtype)
+    v_new = jax.random.normal(ks[6], (B, Hkv, hd), dtype)
+    # scatter k_new/v_new at position seq_len - 1 (row, offset per batch)
+    w = seq_lens - 1
+    rows = bt[jnp.arange(B), w // page]
+    offs = w % page
+    kp_sc = kp.at[rows, offs].set(k_new)
+    vp_sc = vp.at[rows, offs].set(v_new)
+    exp_ref = ref.paged_attention_ref(q, kp_sc, vp_sc, bt, seq_lens)
+    got_ref = ref.paged_attention_ref(q, kp, vp, bt, seq_lens,
+                                      k_new=k_new, v_new=v_new)
+    np.testing.assert_array_equal(np.asarray(got_ref, np.float32),
+                                  np.asarray(exp_ref, np.float32))
+    exp_pl = paged_attention(q, kp_sc, vp_sc, bt, seq_lens, page_size=page,
+                             interpret=True)
+    got_pl = paged_attention(q, kp, vp, bt, seq_lens, page_size=page,
+                             interpret=True, k_new=k_new, v_new=v_new)
+    np.testing.assert_array_equal(np.asarray(got_pl, np.float32),
+                                  np.asarray(exp_pl, np.float32))
+    np.testing.assert_allclose(np.asarray(got_pl, np.float32),
+                               np.asarray(got_ref, np.float32), **_tol(dtype))
+
+
 @pytest.mark.parametrize("B,C,H,Hkv,hd,page,slots", [
     (2, 4, 4, 2, 8, 4, 4),       # GQA 2x, chunk spans pages
     (3, 8, 6, 2, 16, 8, 3),      # GQA 3x
